@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-experiment benchmarks.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows; ``us_per_call``
+is the wall time of one scheduler invocation (the paper's algorithms are
+compile-time/offline, so latency of the scheduler itself is the system
+cost), ``derived`` is the experiment's metric (SLR / speedup / LB / SFR /
+precision / makespan).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Topology, paper_topology
+
+# The six execution-rate patterns of Section 5.2 (three quoted in the paper).
+RATE_PATTERNS: List[Tuple[float, float, float]] = [
+    (1.0, 0.67, 0.83),
+    (0.83, 0.67, 1.0),
+    (0.67, 0.83, 1.0),
+    (1.0, 0.83, 0.67),
+    (0.83, 1.0, 0.67),
+    (0.67, 1.0, 0.83),
+]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    if isinstance(derived, float):
+        derived = f"{derived:.4f}"
+    return f"{name},{us:.1f},{derived}"
+
+
+def emit(rows: Sequence[str]) -> None:
+    for r in rows:
+        print(r)

@@ -1,0 +1,28 @@
+"""Exp 0 — the paper's worked example (Figs. 4-6, Tables 1-3).
+
+Reproduces: HSV_CC makespan 73, HVLB_CC (A)/(B) makespan 62, and the
+Fig. 5 alpha sweep plateau boundaries.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import paper_spg, paper_topology, schedule_hsv_cc, \
+    schedule_hvlb_cc
+
+from .common import row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    g, tg = paper_spg(), paper_topology()
+    s, us = timed(schedule_hsv_cc, g, tg)
+    rows.append(row("exp0.hsv_cc.makespan", us, s.makespan))
+    for variant in ("A", "B"):
+        res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
+                        alpha_max=3.0, period=150.0)
+        rows.append(row(f"exp0.hvlb_cc_{variant}.makespan", us,
+                        res.best.makespan))
+        rows.append(row(f"exp0.hvlb_cc_{variant}.best_alpha", us,
+                        res.best_alpha))
+    return rows

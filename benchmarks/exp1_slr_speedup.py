@@ -1,0 +1,54 @@
+"""Exp 1 (Fig. 7) — SLR and speedup vs number of tasks.
+
+Random out-degree-constrained SPGs (the family HSV_CC can schedule), three
+processor execution-rate patterns, CCR = 1.  Reports mean/worst SLR and
+mean/best speedup for HSV_CC vs HVLB_CC (A)/(B).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (paper_topology, random_spg, schedule_hsv_cc,
+                        schedule_hvlb_cc, slr, speedup)
+
+from .common import RATE_PATTERNS, row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    n_graphs = 100 if full else 20
+    alpha_max = 20.0 if full else 5.0
+    sizes = [10, 20, 30, 40, 50]
+    for rates in RATE_PATTERNS[:3]:
+        tg = paper_topology(rates=rates)
+        tag = "r" + "-".join(f"{x:g}" for x in rates)
+        for n in sizes:
+            rng = np.random.default_rng(1000 + n)
+            stats = {k: ([], []) for k in ("hsv", "hvlbA", "hvlbB")}
+            us_tot = {k: 0.0 for k in stats}
+            for _ in range(n_graphs):
+                g = random_spg(n, rng, ccr=1.0, tg=tg,
+                               outdeg_constraint=True)
+                s, us = timed(schedule_hsv_cc, g, tg)
+                stats["hsv"][0].append(slr(s))
+                stats["hsv"][1].append(speedup(s))
+                us_tot["hsv"] += us
+                for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
+                    res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
+                                    alpha_max=alpha_max, alpha_step=0.05)
+                    stats[key][0].append(slr(res.best))
+                    stats[key][1].append(speedup(res.best))
+                    us_tot[key] += us
+            for key, (slrs, sps) in stats.items():
+                us = us_tot[key] / n_graphs
+                rows.append(row(f"exp1.{tag}.n{n}.{key}.slr_mean", us,
+                                float(np.mean(slrs))))
+                rows.append(row(f"exp1.{tag}.n{n}.{key}.slr_worst", us,
+                                float(np.max(slrs))))
+                rows.append(row(f"exp1.{tag}.n{n}.{key}.speedup_mean", us,
+                                float(np.mean(sps))))
+                rows.append(row(f"exp1.{tag}.n{n}.{key}.speedup_best", us,
+                                float(np.max(sps))))
+    return rows

@@ -1,0 +1,43 @@
+"""Exp 2 (Fig. 8) — load balance (Eq. 24) vs number of tasks.
+
+Lower LB is better (1.0 = perfectly balanced).  HVLB_CC must beat HSV_CC
+for every task count and rate pattern.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (load_balance, paper_topology, random_spg,
+                        schedule_hsv_cc, schedule_hvlb_cc)
+
+from .common import RATE_PATTERNS, row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    n_graphs = 100 if full else 20
+    alpha_max = 20.0 if full else 5.0
+    for rates in RATE_PATTERNS[:3]:
+        tg = paper_topology(rates=rates)
+        tag = "r" + "-".join(f"{x:g}" for x in rates)
+        for n in (10, 20, 30, 40, 50):
+            rng = np.random.default_rng(2000 + n)
+            lbs = {k: [] for k in ("hsv", "hvlbA", "hvlbB")}
+            us_tot = {k: 0.0 for k in lbs}
+            for _ in range(n_graphs):
+                g = random_spg(n, rng, ccr=1.0, tg=tg,
+                               outdeg_constraint=True)
+                s, us = timed(schedule_hsv_cc, g, tg)
+                lbs["hsv"].append(load_balance(s)); us_tot["hsv"] += us
+                for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
+                    res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
+                                    alpha_max=alpha_max, alpha_step=0.05)
+                    lbs[key].append(load_balance(res.best))
+                    us_tot[key] += us
+            for key, vals in lbs.items():
+                rows.append(row(f"exp2.{tag}.n{n}.{key}.lb_mean",
+                                us_tot[key] / n_graphs,
+                                float(np.mean(vals))))
+    return rows

@@ -1,0 +1,40 @@
+"""Exp 3 (Fig. 9) — SLR vs CCR in {0.1, 0.5, 1, 5, 10}, n = 20 tasks,
+rates (0.83, 1.0, 0.67)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (paper_topology, random_spg, schedule_hsv_cc,
+                        schedule_hvlb_cc, slr)
+
+from .common import row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    n_graphs = 100 if full else 20
+    alpha_max = 20.0 if full else 5.0
+    tg = paper_topology(rates=(0.83, 1.0, 0.67))
+    for ccr in (0.1, 0.5, 1.0, 5.0, 10.0):
+        rng = np.random.default_rng(int(3000 + ccr * 10))
+        slrs = {k: [] for k in ("hsv", "hvlbA", "hvlbB")}
+        us_tot = {k: 0.0 for k in slrs}
+        for _ in range(n_graphs):
+            g = random_spg(20, rng, ccr=ccr, tg=tg, outdeg_constraint=True)
+            s, us = timed(schedule_hsv_cc, g, tg)
+            slrs["hsv"].append(slr(s)); us_tot["hsv"] += us
+            for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
+                res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
+                                alpha_max=alpha_max, alpha_step=0.05)
+                slrs[key].append(slr(res.best)); us_tot[key] += us
+        for key, vals in slrs.items():
+            us = us_tot[key] / n_graphs
+            rows.append(row(f"exp3.ccr{ccr:g}.{key}.slr_mean", us,
+                            float(np.mean(vals))))
+            rows.append(row(f"exp3.ccr{ccr:g}.{key}.slr_worst", us,
+                            float(np.max(vals))))
+            rows.append(row(f"exp3.ccr{ccr:g}.{key}.slr_best", us,
+                            float(np.min(vals))))
+    return rows

@@ -1,0 +1,53 @@
+"""Exp 4 (Fig. 10) — scheduling failure rate on unconstrained random DAGs.
+
+Paper: HSV_CC 78%, HVLB_CC(depth) 29%, HVLB_CC(depth^2) 0%.
+We report four prioritizers: HSV_CC, the literal Eq.-9 form at depth^1 and
+depth^2, and the indicator form at depth^2 (the paper's Table-2 semantics,
+provably 0% — see ranks.hprv_b).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import paper_topology, random_spg, sfr
+from repro.core.ranks import hprv_a, hprv_b, priority_queue, rank_matrix
+
+from .common import row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    n_graphs = 1000 if full else 200
+    tg = paper_topology()
+    rng = np.random.default_rng(4000)
+    fails = {"hsv": 0, "depth1_literal": 0, "depth2_literal": 0,
+             "depth2_indicator": 0}
+    us_tot = 0.0
+
+    def variants(g, r):
+        return {
+            "hsv": hprv_a(g, tg, r),
+            "depth1_literal": hprv_b(g, tg, r, depth_power=1,
+                                     outd_mode="literal"),
+            "depth2_literal": hprv_b(g, tg, r, depth_power=2,
+                                     outd_mode="literal"),
+            "depth2_indicator": hprv_b(g, tg, r, depth_power=2),
+        }
+
+    for _ in range(n_graphs):
+        n = int(rng.integers(10, 51))
+        g = random_spg(n, rng, ccr=1.0, tg=tg, outdeg_constraint=False)
+        (r, _), us = timed(lambda: (rank_matrix(g, tg), None))
+        us_tot += us
+        h = r.mean(1)
+        for name, prv in variants(g, r).items():
+            q = priority_queue(prv, h)
+            pos = {t: i for i, t in enumerate(q)}
+            if any(pos[i] > pos[j] for (i, j) in g.edges):
+                fails[name] += 1
+    for name, f in fails.items():
+        rows.append(row(f"exp4.{name}.sfr_pct", us_tot / n_graphs,
+                        sfr(f, n_graphs)))
+    return rows

@@ -1,0 +1,55 @@
+"""Exp 6 (beyond-paper) — the paper's scheduler as a TPU pipeline/pod
+placement planner.
+
+Workloads per architecture:
+  pipe   — 8-microbatch pipeline DAG over 8 mesh slices (2 pods, shared
+           DCN bus = the paper's gateway/contention model),
+  pipe+straggler — same with slice 3 degraded to 0.6x (mixed-generation /
+           thermally-throttled pod), the static re-plan answer,
+  dsms   — multi-query serving graph (3 applications tapping a shared
+           backbone): HSV_CC cannot even order it (Section 3.2), HVLB_CC
+           (B) schedules it.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.scheduler import SchedulingFailure
+from repro.planner import (pipeline_graph, plan_placement,
+                           serving_query_graph, tpu_slice_topology)
+
+from .common import row, timed
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    archs = sorted(ARCHS) if full else ["qwen3-8b", "zamba2-2.7b",
+                                        "dbrx-132b", "falcon-mamba-7b"]
+    tg = tpu_slice_topology(n_slices=8, chips_per_slice=32, pods=2)
+    tg_bad = tpu_slice_topology(n_slices=8, chips_per_slice=32, pods=2,
+                                degraded={3: 0.6})
+    for arch in archs:
+        cfg = ARCHS[arch]
+        g = pipeline_graph(cfg, SHAPES["train_4k"], n_microbatches=8)
+        for name, topo in (("pipe", tg), ("pipe_straggler", tg_bad)):
+            for alg in ("hsv", "hvlb_b"):
+                try:
+                    plan, us = timed(plan_placement, g, topo, alg)
+                    rows.append(row(f"exp6.{arch}.{name}.{alg}.makespan_ms",
+                                    us, plan.makespan_s * 1e3))
+                    rows.append(row(f"exp6.{arch}.{name}.{alg}.lb",
+                                    us, plan.load_balance))
+                except SchedulingFailure:
+                    rows.append(row(f"exp6.{arch}.{name}.{alg}.makespan_ms",
+                                    0.0, "schedule_failure"))
+        q = serving_query_graph(cfg, SHAPES["decode_32k"], n_queries=3)
+        for alg in ("hsv", "hvlb_b"):
+            try:
+                plan, us = timed(plan_placement, q, tg, alg)
+                rows.append(row(f"exp6.{arch}.dsms.{alg}.makespan_ms",
+                                us, plan.makespan_s * 1e3))
+            except SchedulingFailure:
+                rows.append(row(f"exp6.{arch}.dsms.{alg}.makespan_ms",
+                                0.0, "schedule_failure"))
+    return rows

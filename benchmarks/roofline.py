@@ -1,0 +1,112 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Reads the dry-run artifacts (experiments/dryrun/*.json) and derives, per
+(arch x shape) on the single-pod mesh:
+
+  compute term    = FLOPs / (chips x 197 TFLOP/s)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = per-chip collective bytes / (links x 50 GB/s ICI)
+                    [+ DCN share / 6.25 GB/s on the multipod mesh]
+
+FLOPs/HBM bytes are analytic (XLA cost_analysis counts scan bodies once —
+the raw HLO numbers are reported alongside as *_hlo for transparency).
+Collective bytes come from the compiled per-device SPMD program; in-loop
+collectives are likewise counted once per scan (lower bound).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+       [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES, cell_supported
+from repro.planner.cost_model import HW, hbm_bytes, model_flops, total_flops
+
+HWC = HW()
+
+
+def cell_terms(arch: str, shape_name: str, rec: Dict) -> Dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    chips = rec["chips"]
+    flops = total_flops(cfg, shape)
+    mem = hbm_bytes(cfg, shape)
+    coll_per_chip = sum(rec["collectives"].values())
+    t_compute = flops / (chips * HWC.peak_flops)
+    t_memory = mem / (chips * HWC.hbm_bw)
+    t_coll = coll_per_chip / (HWC.ici_links * HWC.ici_bw)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / flops,
+        "flops_hlo_per_chip": rec.get("cost", {}).get("flops", 0.0),
+        "coll_bytes_per_chip": coll_per_chip,
+        "roofline_bound_s": max(terms.values()),
+        "roofline_frac": max(terms.values()) / sum(terms.values()),
+    }
+
+
+def load_all(dirpath: Path, mesh: str = "pod") -> List[Dict]:
+    out = []
+    for a in sorted(ARCHS):
+        for s in SHAPES:
+            p = dirpath / f"{a}__{s}__{mesh}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if "skipped" in rec or "failed" in rec:
+                continue
+            out.append(cell_terms(a, s, rec))
+    return out
+
+
+def as_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOP ratio | bound (s) |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+                 f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                 f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+                 f"{r['roofline_bound_s']:.4g} |\n")
+    return hdr + body
+
+
+def run(full: bool = False) -> List[str]:
+    rows = load_all(Path("experiments/dryrun"))
+    out = []
+    for r in rows:
+        name = f"roofline.{r['arch']}.{r['shape']}"
+        out.append(f"{name}.dominant,0.0,{r['dominant']}")
+        out.append(f"{name}.bound_s,0.0,{r['roofline_bound_s']:.6g}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="experiments/roofline.md")
+    args = ap.parse_args()
+    rows = load_all(Path(args.dir))
+    md = as_markdown(rows)
+    Path(args.md).write_text(md)
+    print(md)
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("dominant-term histogram:", doms)
+
+
+if __name__ == "__main__":
+    main()

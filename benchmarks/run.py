@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,exp3]
+
+Emits ``name,us_per_call,derived`` CSV on stdout.  ``--full`` uses the
+paper's sample sizes (100 graphs/point, 1000 DAGs for SFR, alpha to 20).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+MODULES = [
+    "exp0_paper_example",
+    "exp1_slr_speedup",
+    "exp2_load_balance",
+    "exp3_ccr",
+    "exp4_sfr",
+    "exp5_imprecise",
+    "exp6_tpu_placement",
+    "roofline",               # §Roofline summary rows from the dry-run
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sample sizes")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated exp prefixes to run")
+    args = ap.parse_args()
+    only = [x.strip() for x in args.only.split(",") if x.strip()]
+
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+        except ModuleNotFoundError as e:
+            print(f"# skipped {mod_name}: {e}", file=sys.stderr)
+            continue
+        for r in mod.run(full=args.full):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: the paper's scheduler end-to-end in 40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (paper_spg, paper_topology, schedule_hsv_cc,
+                        schedule_hvlb_cc, schedule_holes, slr, speedup,
+                        load_balance)
+
+# 1. The paper's worked example: Fig. 3 graph on the Fig. 2 network.
+g = paper_spg()
+tg = paper_topology()
+
+# 2. Baseline HSV_CC (Xie et al.) — tasks pile onto the fast processors.
+hsv = schedule_hsv_cc(g, tg)
+print(f"HSV_CC   makespan={hsv.makespan:5.1f}  SLR={slr(hsv):.2f} "
+      f"speedup={speedup(hsv):.2f}  LB={load_balance(hsv):.2f}")
+for p in range(3):
+    tasks = [f"n{i+1}" for i in hsv.tasks_on(p)]
+    print(f"  p{p+1}: {tasks}")
+
+# 3. HVLB_CC — load-balanced, contention-aware (Algorithm 1, alpha sweep).
+res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0, period=150.0)
+best = res.best
+print(f"\nHVLB_CC(B) makespan={best.makespan:5.1f} (alpha={res.best_alpha:.2f}) "
+      f"SLR={slr(best):.2f} speedup={speedup(best):.2f} "
+      f"LB={load_balance(best):.2f}")
+for p in range(3):
+    tasks = [f"n{i+1}" for i in best.tasks_on(p)]
+    print(f"  p{p+1}: {tasks}")
+
+# 4. Schedule holes -> imprecise computation headroom (Section 4.4).
+holes = schedule_holes(best)
+print("\nschedule holes:", {f"n{k+1}": round(v, 1) for k, v in holes.items()})
+print("\n(paper: HSV_CC=73, HVLB_CC=62 — see tests/test_paper_example.py)")

@@ -1,0 +1,96 @@
+"""Fault-tolerant checkpointing with elastic resharding.
+
+Layout: ``<dir>/step_<n>/<flat.key.path>.npy`` plus ``manifest.json``.
+Writes go to a temp dir and are atomically renamed, so a crash mid-save
+never corrupts the latest checkpoint (restart picks the previous one).
+
+Restore reshards to whatever mesh/shardings the caller passes — restoring
+a 4-way checkpoint onto 2 devices (or 512) is the elastic-scaling path;
+combined with the step-indexed data pipeline, a restart is exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+SEP = "::"
+
+
+def _flatten(tree: Tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Tree) -> Path:
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f".tmp_step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten(tree)
+    manifest = {}
+    for key, arr in flat.items():
+        fname = key.replace("/", "_") + ".npy"
+        np.save(tmp / fname, arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(
+        {"step": step, "leaves": manifest}, indent=1))
+    final = d / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Tree,
+            shardings: Optional[Tree] = None) -> Tree:
+    """Load into the structure of ``like``; reshard onto ``shardings``
+    (tree of NamedSharding) if given — any mesh size works."""
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+    flat_sh = _flatten_aux(shardings) if shardings is not None else {}
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.load(d / manifest[key]["file"])
+        if key in flat_sh and flat_sh[key] is not None:
+            out.append(jax.device_put(arr, flat_sh[key]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _flatten_aux(tree: Tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: x is None or hasattr(x, "spec"))[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat

@@ -1,0 +1,23 @@
+"""Core paper algorithms: contention-aware, load-balanced static list
+scheduling for stream-processing DAGs on heterogeneous processors/networks.
+"""
+from .graph import PAPER_COMP, PAPER_COMP_EXP5, PAPER_EDGES, SPG, paper_spg
+from .hsv_cc import schedule_hsv_cc
+from .hvlb_cc import SweepResult, schedule_hvlb_cc, schedule_hvlb_cc_best
+from .imprecise import precision, precision_curve, schedule_holes
+from .metrics import load_balance, sfr, slr, speedup
+from .ranks import hprv_a, hprv_b, hrank, ldet_cc, priority_queue, rank_matrix
+from .scheduler import (MessagePlacement, Schedule, SchedulingFailure,
+                        list_schedule)
+from .tgff import random_spg
+from .topology import Topology, fully_switched_topology, paper_topology
+
+__all__ = [
+    "SPG", "paper_spg", "PAPER_EDGES", "PAPER_COMP", "PAPER_COMP_EXP5",
+    "Topology", "paper_topology", "fully_switched_topology",
+    "rank_matrix", "hrank", "hprv_a", "hprv_b", "ldet_cc", "priority_queue",
+    "Schedule", "MessagePlacement", "SchedulingFailure", "list_schedule",
+    "schedule_hsv_cc", "schedule_hvlb_cc", "schedule_hvlb_cc_best",
+    "SweepResult", "schedule_holes", "precision", "precision_curve",
+    "slr", "speedup", "load_balance", "sfr", "random_spg",
+]

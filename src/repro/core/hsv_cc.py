@@ -1,0 +1,18 @@
+"""HSV_CC baseline (Xie et al. [25]) — the algorithm the paper improves on.
+
+Priorities: HPRV_CC = hrank * outd (Eq. 8).  Selection: EFT * LDET_CC.
+Equivalent to HVLB_CC with alpha = 0 (BP == 1).
+"""
+from __future__ import annotations
+
+from .graph import SPG
+from .ranks import hprv_a, hrank, priority_queue, rank_matrix
+from .scheduler import Schedule, list_schedule
+from .topology import Topology
+
+
+def schedule_hsv_cc(g: SPG, tg: Topology) -> Schedule:
+    rank = rank_matrix(g, tg)
+    h = rank.mean(axis=1)
+    queue = priority_queue(hprv_a(g, tg, rank), h)
+    return list_schedule(g, tg, queue, rank, alpha=0.0)

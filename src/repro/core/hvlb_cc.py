@@ -1,0 +1,61 @@
+"""HVLB_CC (A) and (B): load-balanced, contention-aware list scheduling
+(Algorithm 1 of the paper).
+
+Variant A keeps HSV_CC's prioritizer (Eq. 8); variant B uses the
+depth^2-damped prioritizer (Eq. 9) that makes arbitrary stream-processing
+graphs schedulable.  Both sweep the balancing weight ``alpha`` and keep the
+minimum-makespan schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .graph import SPG
+from .ranks import hprv_a, hprv_b, priority_queue, rank_matrix
+from .scheduler import Schedule, SchedulingFailure, list_schedule
+from .topology import Topology
+
+
+@dataclasses.dataclass
+class SweepResult:
+    best: Schedule
+    best_alpha: float
+    curve: List[Tuple[float, float]]     # (alpha, makespan) — Fig. 5 data
+
+
+def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
+                     alpha_max: float = 3.0, alpha_step: float = 0.01,
+                     period: Optional[float] = None,
+                     depth_power: int = 2,
+                     outd_mode: str = "indicator") -> SweepResult:
+    """Algorithm 1: sweep alpha in [0, alpha_max], keep min makespan."""
+    rank = rank_matrix(g, tg)
+    h = rank.mean(axis=1)
+    if variant.upper() == "A":
+        prv = hprv_a(g, tg, rank)
+    elif variant.upper() == "B":
+        prv = hprv_b(g, tg, rank, depth_power=depth_power,
+                     outd_mode=outd_mode)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    queue = priority_queue(prv, h)
+
+    best: Optional[Schedule] = None
+    best_alpha = 0.0
+    curve: List[Tuple[float, float]] = []
+    n_steps = int(round(alpha_max / alpha_step))
+    for k in range(n_steps + 1):
+        alpha = k * alpha_step
+        s = list_schedule(g, tg, queue, rank, alpha=alpha, period=period)
+        curve.append((alpha, s.makespan))
+        if best is None or s.makespan < best.makespan - 1e-12:
+            best, best_alpha = s, alpha
+    assert best is not None
+    return SweepResult(best, best_alpha, curve)
+
+
+def schedule_hvlb_cc_best(g: SPG, tg: Topology, **kw) -> Schedule:
+    return schedule_hvlb_cc(g, tg, **kw).best

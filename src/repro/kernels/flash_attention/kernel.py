@@ -1,0 +1,109 @@
+"""FlashAttention forward as a Pallas TPU kernel.
+
+Schedule (TPU adaptation — not a CUDA port): the grid walks
+(batch*kv_head, group, q_block, kv_block) with the kv_block axis
+INNERMOST and sequential; online-softmax statistics (m, l) and the output
+accumulator live in VMEM scratch across kv iterations.  Block shapes are
+MXU-aligned (multiples of 128 on the S dims, head_dim lanes); HBM->VMEM
+movement is expressed entirely through BlockSpec index maps so each tile
+is streamed once per use.
+
+Causal handling: fully-masked kv blocks are skipped via ``pl.when`` on
+the block indices (no wasted MXU work past the diagonal); the diagonal
+block applies an elementwise mask.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip blocks strictly above the diagonal (causal)
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0, :, :].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0, :, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, Hq, S, d), k/v (B, Hkv, S, d) -> (B, Hq, S, d)."""
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    bh = B * Hkv
+    qr = q.reshape(bh, G, S, d)
+    kr = k.reshape(bh, S, d)
+    vr = v.reshape(bh, S, d)
+    grid = (bh, G, S // block_q, S // block_k)
+    scale = 1.0 / math.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, block_q=block_q,
+                          block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, g, i, j: (b, g, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, g, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, g, i, j: (b, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, G, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l: running sum
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, S, d)

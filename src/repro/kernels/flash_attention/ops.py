@@ -1,0 +1,24 @@
+"""jit'd public wrapper: Pallas kernel on TPU, interpret-mode kernel or
+jnp oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    use_kernel: bool = True) -> jax.Array:
+    """q (B, Hq, S, d), k/v (B, Hkv, S, d) -> (B, Hq, S, d)."""
+    if use_kernel and _on_tpu():
+        return flash_attention_kernel(q, k, v, causal=causal)
+    return attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blocked (flash) attention with GQA + causal mask."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q (B, Hq, S, d), k/v (B, Hkv, S, d) -> (B, Hq, S, d).
+
+    GQA: Hq must be a multiple of Hkv; query head h reads kv head
+    ``h // (Hq // Hkv)``.  Accumulation in fp32.
+    """
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, S, d).astype(q.dtype)

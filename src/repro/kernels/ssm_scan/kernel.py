@@ -1,0 +1,79 @@
+"""Mamba-1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation: the recurrence is carried in VMEM scratch over a grid
+whose sequence axis is innermost-sequential; each program instance owns a
+(channel-block x state) tile of ``h`` so the VPU processes (block_d, N)
+elementwise updates while the sequence advances.  deltaA = exp(dt*A) is
+computed on the fly per tile — the (B,S,Di,N) tensor never exists in HBM
+(that blow-up is exactly what makes a naive TPU port of the CUDA scan
+infeasible).
+
+Grid: (batch, Di/block_d, S/block_s); the per-step inner loop runs
+``block_s`` sequential VPU updates on resident tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 512
+DEFAULT_BLOCK_S = 256
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                 block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                    # (bd, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)        # (bd,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)          # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        da = jnp.exp(dt_t[:, None] * a)                   # (bd, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = (h @ c_t).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[...])
+    h_ref[...] = h
+
+
+def selective_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
+                          Bm: jax.Array, Cm: jax.Array, *,
+                          block_d: int = DEFAULT_BLOCK_D,
+                          block_s: int = DEFAULT_BLOCK_S,
+                          interpret: bool = False) -> jax.Array:
+    """x, dt (B,S,Di); A (Di,N); Bm, Cm (B,S,N) -> y (B,S,Di)."""
+    B, S, Di = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, Di)
+    block_s = min(block_s, S)
+    assert Di % block_d == 0 and S % block_s == 0
+    grid = (B, Di // block_d, S // block_s)
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((1, block_s, N), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, N), lambda b, d, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d),
+                               lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

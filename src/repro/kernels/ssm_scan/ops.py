@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the selective scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import selective_scan_kernel
+from .ref import selective_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def selective_scan(x, dt, A, Bm, Cm, use_kernel: bool = True):
+    if use_kernel and _on_tpu():
+        return selective_scan_kernel(x, dt, A, Bm, Cm)
+    return selective_scan_ref(x, dt, A, Bm, Cm)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+y_t = h_t @ C_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array) -> jax.Array:
+    """x, dt (B,S,Di); A (Di,N); Bm, Cm (B,S,N) -> y (B,S,Di)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    deltaA = jnp.exp(dtf[..., None] * Af)                 # (B,S,Di,N)
+    dBx = (dtf * xf)[..., None] * Bf[:, :, None, :]       # (B,S,Di,N)
+
+    def step(h, inp):
+        da, bx, c = inp
+        h = da * h + bx
+        return h, jnp.einsum("ben,bn->be", h, c)
+
+    B, S, Di = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(deltaA, 1, 0),
+                                    jnp.moveaxis(dBx, 1, 0),
+                                    jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

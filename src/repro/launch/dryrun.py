@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+# record memory/cost/collective analysis — proves the distribution config
+# is coherent without hardware.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+#       --shape train_4k --mesh pod
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+#
+# The first two lines above MUST stay the first statements in this module:
+# jax locks the device count at first init.
+
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, cell_supported, get_arch, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.params import abstract_params, param_shardings
+from repro.models.sharding import RuleTable, use_sharding
+from repro.optim.adamw import abstract_opt_state
+from repro.train.step import (batch_shardings, cache_shardings,
+                              make_serve_step, make_train_step, opt_shardings)
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "c128": 16, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f8e4m3": 1, "f8e5m2": 1, "s8": 1, "u8": 1,
+                "pred": 1, "s4": 1, "u4": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    ``-start`` variants are counted once (their ``-done`` twin carries no
+    new transfer).  Bytes are per-device (the HLO is the per-device SPMD
+    program).
+    """
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split(f" {op}(")[0].split(f" {op}-start(")[0]
+                if "=" in lhs:
+                    lhs = lhs.split("=", 1)[1]
+                total = 0
+                for dt, dims in _SHAPE_RE.findall(lhs):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    total += n * _DTYPE_BYTES[dt]
+                out[op] += total
+                break
+    return out
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        keys = ("temp_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:                      # CPU backend may not support
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error_msg": str(e)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               rules: Optional[RuleTable] = None,
+               remat: bool = True, microbatch: int = 1):
+    """Returns (jitted_fn, abstract_args) for one cell under the mesh."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"unsupported cell: {why}")
+    specs = input_specs(cfg, shape)
+
+    def ctx(f):
+        # the sharding context must be active while the function is TRACED
+        # (inside .lower()), not just while jax.jit is constructed —
+        # otherwise every activation constraint silently no-ops.
+        def wrapped(*a):
+            with use_sharding(mesh, rules):
+                return f(*a)
+        return wrapped
+
+    with use_sharding(mesh, rules):
+        p_sh = param_shardings(cfg)
+        b_sh = batch_shardings(cfg, shape, mesh)
+        ab_params = abstract_params(cfg)
+        if shape.kind in ("train",):
+            step = make_train_step(cfg, remat=remat, microbatch=microbatch)
+            o_sh = opt_shardings(cfg)
+            ab_opt = abstract_opt_state(cfg)
+            fn = jax.jit(ctx(step),
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            args = (ab_params, ab_opt, specs)
+        elif shape.kind == "prefill":
+            def fwd(params, batch):
+                return M.forward(cfg, params, batch, remat=False)
+            fn = jax.jit(ctx(fwd), in_shardings=(p_sh, b_sh),
+                         out_shardings=None)
+            args = (ab_params, specs)
+        else:                                   # decode
+            serve = make_serve_step(cfg)
+            c_sh = cache_shardings(cfg, shape.global_batch, shape.seq_len)
+            ab_cache = M.abstract_cache(cfg, shape.global_batch,
+                                        shape.seq_len)
+            fn = jax.jit(ctx(serve),
+                         in_shardings=(p_sh, c_sh, b_sh["tokens"],
+                                       b_sh["positions"]),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+            args = (ab_params, ab_cache, specs["tokens"], specs["positions"])
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             rules: Optional[RuleTable] = None, remat: bool = True,
+             microbatch: int = 1, keep_hlo: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    fn, args = build_cell(arch, shape_name, mesh, rules=rules, remat=remat,
+                          microbatch=microbatch)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_analysis(compiled),
+        "cost": _cost_analysis(compiled),
+        "collectives": collective_bytes(hlo),
+        "n_hlo_lines": hlo.count("\n"),
+    }
+    if keep_hlo:
+        rec["hlo"] = hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="")
+    ap.add_argument("--shape", type=str, default="")
+    ap.add_argument("--mesh", type=str, default="pod",
+                    choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in SHAPES:
+                ok, why = cell_supported(ARCHS[a], SHAPES[s])
+                for mk in ("pod", "multipod"):
+                    if ok:
+                        cells.append((a, s, mk))
+                    else:
+                        (outdir / f"{a}__{s}__{mk}.json").write_text(
+                            json.dumps({"arch": a, "shape": s, "mesh": mk,
+                                        "skipped": why}, indent=1))
+    else:
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for (a, s, mk) in cells:
+        path = outdir / f"{a}__{s}__{mk}.json"
+        if path.exists() and args.all:
+            d = json.loads(path.read_text())
+            if "cost" in d or "skipped" in d:
+                print(f"skip (cached): {a} {s} {mk}")
+                continue
+        print(f"=== {a} x {s} x {mk} ===", flush=True)
+        try:
+            rec = run_cell(a, s, mk, remat=not args.no_remat,
+                           microbatch=args.microbatch)
+            print(json.dumps({k: rec[k] for k in
+                              ("chips", "lower_s", "compile_s",
+                               "collectives")}, indent=1), flush=True)
+            print("memory:", rec["memory"], flush=True)
+            flops = rec["cost"].get("flops")
+            print(f"cost: flops={flops}", flush=True)
+        except Exception as e:
+            rec = {"arch": a, "shape": s, "mesh": mk,
+                   "failed": f"{type(e).__name__}: {e}"}
+            print("FAILED:", rec["failed"], flush=True)
+        path.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,423 @@
+"""Model layers, pure-JAX reference path (Pallas kernels plug in via
+``repro.kernels`` where perf-critical; the reference path is what the
+CPU dry-run lowers).
+
+All functions are functional: ``params`` are plain dicts of arrays.
+Activation sharding constraints use logical axis names (see sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .sharding import shard
+
+Params = Dict[str, jax.Array]
+
+# Query-chunk size above which attention switches to the memory-bounded
+# online-softmax path (pure-JAX flash-style; the Pallas kernel is the TPU
+# realization of the same schedule).
+ATTN_CHUNK_THRESHOLD = 8192
+ATTN_CHUNK = 2048
+# MoE dispatch group size + capacity factor (GShard-style).
+MOE_GROUP = 256
+MOE_CAPACITY_FACTOR = 1.25
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+# ----------------------------------------------------------------- rotary
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rot(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (even, odd) of the last dim; cos/sin (..., d/2)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(cfg: ModelConfig, q: jax.Array, k: jax.Array,
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """q (B,S,H,dh), k (B,S,K,dh), positions (B,S)."""
+    dh = cfg.head_dim
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "standard":
+        cos, sin = _rope_angles(positions, dh, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return _apply_rot(q, cos, sin), _apply_rot(k, cos, sin)
+    if cfg.rope == "partial":
+        # chatglm-style 2d RoPE: rotary on the first half of head_dim.
+        rd = dh // 2
+        cos, sin = _rope_angles(positions, rd, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q = jnp.concatenate([_apply_rot(q[..., :rd], cos, sin), q[..., rd:]], -1)
+        k = jnp.concatenate([_apply_rot(k[..., :rd], cos, sin), k[..., rd:]], -1)
+        return q, k
+    if cfg.rope == "mrope":
+        # qwen2-vl M-RoPE: head_dim split into (t, h, w) sections with
+        # separate position streams (stub: derived from the 1-d position).
+        sec = dh // 2 // 4                      # quarters: 2t, 1h, 1w
+        pos_t = positions
+        pos_h = positions // 64
+        pos_w = positions % 64
+        cos_t, sin_t = _rope_angles(pos_t, dh, cfg.rope_theta)
+        cos_h, sin_h = _rope_angles(pos_h, dh, cfg.rope_theta)
+        cos_w, sin_w = _rope_angles(pos_w, dh, cfg.rope_theta)
+        idx = jnp.arange(dh // 2)
+        sel_h = (idx >= 2 * sec) & (idx < 3 * sec)
+        sel_w = idx >= 3 * sec
+        cos = jnp.where(sel_h, cos_h, jnp.where(sel_w, cos_w, cos_t))
+        sin = jnp.where(sel_h, sin_h, jnp.where(sel_w, sin_w, sin_t))
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return _apply_rot(q, cos, sin), _apply_rot(k, cos, sin)
+    raise ValueError(f"unknown rope variant {cfg.rope!r}")
+
+
+# -------------------------------------------------------------- attention
+def _qk_norm(q, k, p, eps):
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    return q, k
+
+
+def _sdpa_full(q, k, v, causal: bool, q_offset) -> jax.Array:
+    """q (B,Sq,K,G,dh), k/v (B,Sk,K,dh) -> (B,Sq,K,G,dh)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+
+
+def _sdpa_chunked(q, k, v, causal: bool) -> jax.Array:
+    """Online-softmax over query chunks: O(S*C) score memory instead of
+    O(S^2).  Pure-JAX expression of the FlashAttention schedule."""
+    B, S, K, G, dh = q.shape
+    C = ATTN_CHUNK
+    n = S // C
+    scale = 1.0 / math.sqrt(dh)
+    qc = q.reshape(B, n, C, K, G, dh)
+
+    def one_chunk(i, qi):
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qi.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32))
+        if causal:
+            qpos = i * C + jnp.arange(C)
+            mask = qpos[:, None] >= jnp.arange(S)[None, :]
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n), jnp.moveaxis(qc, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, K, G, dh)
+
+
+def attention(cfg: ModelConfig, p: Params, x: jax.Array,
+              positions: jax.Array,
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA attention.  Train/prefill: cache is None.  Decode: x is (B,1,D)
+    and (cache, cache_pos) carry the KV cache and current lengths."""
+    B, S, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    q, k = _qk_norm(q, k, p, cfg.norm_eps)
+    q, k = apply_rope(cfg, q, k, positions)
+    qg = q.reshape(B, S, K, G, dh)
+
+    new_cache = None
+    if cache is not None:
+        # single-token decode against the cache (uniform positions across
+        # the batch — the serving engine pads to a common step index)
+        idx = cache_pos[0]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        scale = 1.0 / math.sqrt(dh)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs",
+                            qg.astype(jnp.float32) * scale,
+                            ck.astype(jnp.float32))
+        Sk = ck.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= cache_pos[:, None]   # (B, Sk)
+        scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(cv.dtype), cv)
+    elif S > ATTN_CHUNK_THRESHOLD and S % ATTN_CHUNK == 0:
+        out = _sdpa_chunked(qg, k, v, cfg.causal)
+    else:
+        out = _sdpa_full(qg, k, v, cfg.causal, 0)
+
+    out = out.reshape(B, S, H * dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# -------------------------------------------------------------------- mlp
+def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+            jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    h = shard(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return shard(out, "batch", "seq", "embed")
+
+
+# -------------------------------------------------------------------- moe
+def moe(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """GShard-style top-k MoE with grouped one-hot dispatch + capacity.
+
+    Tokens are processed in groups of MOE_GROUP; each group dispatches to
+    per-expert capacity ``C = top_k * G / E * capacity_factor`` (overflow
+    tokens drop to the residual path, standard for TPU MoE).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = min(MOE_GROUP, B * S)
+    T = B * S
+    n_groups = T // G
+    C = max(1, int(k * G / E * MOE_CAPACITY_FACTOR))
+
+    xt = x.reshape(n_groups, G, D)
+    logits = jnp.einsum("ngd,de->nge", xt, p["w_router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (n, G, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, slot) inside its expert's capacity buffer:
+    # exclusive cumcount of earlier picks of the same expert in the group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (n,G,k,E)
+    flat = onehot.reshape(n_groups, G * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, G, k, E)
+    pos_sel = jnp.sum(pos * onehot, axis=-1)                 # (n,G,k)
+    keep = pos_sel < C
+    cap_oh = jax.nn.one_hot(pos_sel.astype(jnp.int32), C,
+                            dtype=jnp.float32) * keep[..., None]
+    disp_mask = jnp.einsum("ngke,ngkc->ngec", onehot, cap_oh)
+    comb_mask = jnp.einsum("ngke,ngkc->ngec",
+                           onehot * gate_vals[..., None], cap_oh)
+
+    # keep the token-group dim batch-sharded: replicating it here gathers
+    # every device's dispatched activations (17.5 GiB/step at olmoe
+    # train_4k — §Perf iteration 1)
+    xe = jnp.einsum("ngd,ngec->necd", xt, disp_mask.astype(x.dtype))
+    xe = shard(xe, "batch", "expert", None, None)   # (n, E, C, D)
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("necd,edf->necf", xe, p["w_gate"])) * \
+            jnp.einsum("necd,edf->necf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("necd,edf->necf", xe, p["w_up"]))
+    h = shard(h, "batch", "expert", None, "ff")
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    out = jnp.einsum("necd,ngec->ngd", ye, comb_mask.astype(x.dtype))
+    return shard(out.reshape(B, S, D), "batch", "seq", "embed")
+
+
+# ------------------------------------------------------------------ mamba
+def _ssm_chunk_scan(deltaA, deltaBx):
+    """Sequential scan over chunks, parallel inside via cumulative products.
+
+    deltaA, deltaBx: (B, n_chunks, C, Di, N) viewed per chunk.
+    h_t = deltaA_t * h_{t-1} + deltaBx_t.
+    """
+    # intra-chunk: prefix products P_t = prod_{u<=t} deltaA_u
+    logA = jnp.log(jnp.maximum(deltaA, 1e-20))
+    cumA = jnp.exp(jnp.cumsum(logA, axis=2))                 # (B,nc,C,Di,N)
+    # contribution of in-chunk inputs: sum_u (prod_{u<t<=T} A) * bx_u
+    #   y_t = cumA_t * (h_in + sum_{u<=t} bx_u / cumA_u)
+    inv = deltaBx / jnp.maximum(cumA, 1e-20)
+    acc = jnp.cumsum(inv, axis=2)
+
+    def step(h, xs):
+        cumA_c, acc_c = xs                                   # (B,C,Di,N)
+        h_states = cumA_c * (h[:, None] + acc_c)
+        h_next = h_states[:, -1]
+        return h_next, h_states
+
+    B, nc, C, Di, N = deltaA.shape
+    h0 = jnp.zeros((B, Di, N), deltaA.dtype)
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(cumA, 1, 0), jnp.moveaxis(acc, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)                            # (B,nc,C,Di,N)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d.  x (B,S,Ch), w (k,Ch)."""
+    B, S, Ch = x.shape
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, k - 1, Ch), x.dtype)
+        new_state = None
+    else:
+        pad = state
+        new_state = jnp.concatenate([state, x], axis=1)[:, -(k - 1):]
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(k))
+    return out, new_state
+
+
+def mamba1(cfg: ModelConfig, p: Params, x: jax.Array,
+           state: Optional[Params] = None,
+           ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba-1 selective SSM block (falcon-mamba).  Chunked scan.
+
+    Decode: ``state = {"h": (B,Di,N), "conv": (B,k-1,Di)}``.
+    """
+    B, S, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])             # (B,S,2Di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", "seq", "ssm_inner")
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    bcdt = jnp.einsum("bse,er->bsr", xs, p["w_x"])           # (B,S,R+2N)
+    dt_low, Bss, Css = jnp.split(bcdt, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_low, p["w_dt"])
+                         + p["dt_bias"])                     # (B,S,Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (Di,N)
+
+    deltaA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # (B,S,Di,N)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bss.astype(jnp.float32)[:, :, None, :]               # (B,S,Di,N)
+
+    if state is not None:
+        h = deltaA[:, 0] * state["h"] + dBx[:, 0]            # (B,Di,N)
+        y = jnp.einsum("ben,bn->be", h, Css[:, 0].astype(jnp.float32))
+        y = y[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        C_chunk = min(256, S)
+        nc = S // C_chunk
+        hs = _ssm_chunk_scan(
+            deltaA.reshape(B, nc, C_chunk, Di, N),
+            dBx.reshape(B, nc, C_chunk, Di, N))
+        hs = hs.reshape(B, S, Di, N)
+        y = jnp.einsum("bsen,bsn->bse", hs, Css.astype(jnp.float32))
+        new_state = None
+
+    y = y.astype(x.dtype) + xs * p["D_skip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return shard(out, "batch", "seq", "embed"), new_state
+
+
+def mamba2(cfg: ModelConfig, p: Params, x: jax.Array,
+           state: Optional[Params] = None,
+           ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba-2 (SSD) block with scalar-per-head decay (zamba2 backbone).
+
+    Chunked SSD: intra-chunk attention-like matmuls + inter-chunk state
+    recurrence.  Decode: ``state = {"h": (B,Hs,dh,N), "conv": ...}``.
+    """
+    B, S, D = x.shape
+    Di, N = cfg.d_inner, cfg.d_state
+    Hs, dh = cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xs, Bss, Css, dt_raw = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bss, Css], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])
+    xs, Bss, Css = jnp.split(conv_out, [Di, Di + N], axis=-1)
+    xs = shard(xs, "batch", "seq", "ssm_inner")
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (B,S,Hs)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (Hs,)
+    dA = dt.astype(jnp.float32) * A                          # (B,S,Hs) log-decay
+    xh = xs.reshape(B, S, Hs, dh)
+
+    if state is not None:
+        decay = jnp.exp(dA[:, 0])                            # (B,Hs)
+        h = state["h"] * decay[..., None, None] + \
+            jnp.einsum("bhe,bn->bhen", (dt[:, 0, :, None] * xh[:, 0]),
+                       Bss[:, 0])
+        y = jnp.einsum("bhen,bn->bhe", h, Css[:, 0])
+        y = y.reshape(B, 1, Di)
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        C_chunk = min(256, S)
+        nc = S // C_chunk
+        dAc = dA.reshape(B, nc, C_chunk, Hs)
+        cum = jnp.cumsum(dAc, axis=2)                        # (B,nc,C,Hs)
+        xc = xh.reshape(B, nc, C_chunk, Hs, dh)
+        dtc = dt.reshape(B, nc, C_chunk, Hs)
+        Bc = Bss.reshape(B, nc, C_chunk, N).astype(jnp.float32)
+        Cc = Css.reshape(B, nc, C_chunk, N).astype(jnp.float32)
+        # intra-chunk: L[t,u] = exp(cum_t - cum_u) for t >= u
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,C,C,Hs)
+        tri = jnp.tril(jnp.ones((C_chunk, C_chunk), bool))
+        L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bntk,bnuk->bntu", Cc, Bc)       # (B,nc,C,C)
+        y_intra = jnp.einsum("bntu,bntuh,bnuhe->bnthe",
+                             scores, L, (dtc[..., None] * xc).astype(jnp.float32))
+        # inter-chunk: carry state across chunks
+        seg_end = cum[:, :, -1]                              # (B,nc,Hs)
+        chunk_state = jnp.einsum("bnuh,bnuhe,bnuk->bnhek",
+                                 jnp.exp(seg_end[:, :, None] - cum),
+                                 (dtc[..., None] * xc).astype(jnp.float32), Bc)
+
+        def step(h, xs_):
+            st, end = xs_
+            out = h
+            h = h * jnp.exp(end)[..., None, None] + st
+            return h, out
+
+        h0 = jnp.zeros((B, Hs, dh, N), jnp.float32)
+        _, h_in = jax.lax.scan(
+            step, h0, (jnp.moveaxis(chunk_state, 1, 0),
+                       jnp.moveaxis(seg_end, 1, 0)))
+        h_in = jnp.moveaxis(h_in, 0, 1)                      # (B,nc,Hs,dh,N)
+        y_inter = jnp.einsum("bntk,bnth,bnhek->bnthe",
+                             Cc, jnp.exp(cum), h_in)
+        y = (y_intra + y_inter).reshape(B, S, Hs, dh)
+        y = y.reshape(B, S, Di)
+        new_state = None
+
+    y = y.astype(x.dtype) + xs * p["D_skip"].repeat(dh)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return shard(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,285 @@
+"""Unified model: forward / loss / decode for all six architecture families.
+
+Layers are stacked and scanned (``lax.scan``) so the HLO stays one block
+body regardless of depth — essential for 512-device dry-run compiles.
+The zamba2 hybrid scans groups of Mamba-2 layers with the *shared*
+attention block applied between groups (weight-shared, per-group KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from . import layers as Lyr
+from .layers import attention, mamba1, mamba2, mlp, moe, rms_norm
+from .params import ParamSpec, _is_spec
+from .sharding import shard
+
+Tree = Dict[str, Any]
+
+
+def _cast(tree: Tree, dtype) -> Tree:
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, tree)
+
+
+_EMBED_LOOKUP_CACHE: Dict[Any, Any] = {}
+
+
+def _embed_lookup_for(V: int, D: int, dtype) -> Any:
+    """custom-vjp embedding lookup specialized to the table signature.
+
+    Backward: scatter-add per data-shard into a replicated fp32 table,
+    then constrain back to the sharded layout — one table-sized reduce
+    instead of the batch-replicated one-hot GSPMD would otherwise build
+    (37 GiB/device at qwen2-0.5b train_4k).
+    """
+    key = (V, D, jnp.dtype(dtype).name)
+    if key in _EMBED_LOOKUP_CACHE:
+        return _EMBED_LOOKUP_CACHE[key]
+
+    @jax.custom_vjp
+    def lookup(table, tokens):
+        return jnp.take(table, tokens, axis=0)
+
+    def fwd(table, tokens):
+        return jnp.take(table, tokens, axis=0), tokens
+
+    def bwd(tokens, g):
+        flat_tok = tokens.reshape(-1)
+        flat_g = g.reshape(-1, D).astype(jnp.float32)
+        dtable = jnp.zeros((V, D), jnp.float32).at[flat_tok].add(flat_g)
+        dtable = shard(dtable, "vocab", None).astype(dtype)
+        return dtable, None
+
+    lookup.defvjp(fwd, bwd)
+    _EMBED_LOOKUP_CACHE[key] = lookup
+    return lookup
+
+
+def _embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    V, D = table.shape
+    return _embed_lookup_for(V, D, table.dtype)(table, tokens)
+
+
+def _embed_tokens(cfg: ModelConfig, params: Tree, batch: Tree) -> jax.Array:
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(f)
+    else:
+        # gather the FSDP d_model shard of the table at use-site (weights
+        # are cheap to gather; gathering activations replicates the batch)
+        table = shard(params["embed"], "vocab", None)
+        x = _embed_lookup(table, batch["tokens"]).astype(f)
+        if cfg.vision_prefix and "vision_embeds" in batch:
+            x = jax.lax.dynamic_update_slice(
+                x, batch["vision_embeds"].astype(f), (0, 0, 0))
+    return shard(x, "batch", "seq", "embed")
+
+
+def _dense_block(cfg: ModelConfig, p: Tree, x: jax.Array,
+                 positions: jax.Array) -> jax.Array:
+    h, _ = attention(cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                     positions)
+    x = x + h
+    xn = rms_norm(x, p["norm2"], cfg.norm_eps)
+    ff = moe(cfg, p["moe"], xn) if "moe" in p else mlp(cfg, p["mlp"], xn)
+    # pin the scan-carry layout: without this GSPMD lays the loop state out
+    # batch-replicated / d_model-sharded and drags 37 GiB gathers behind it
+    return shard(x + ff, "batch", "seq", "embed")
+
+
+def _ssm_block(cfg: ModelConfig, p: Tree, x: jax.Array) -> jax.Array:
+    h, _ = mamba1(cfg, p, rms_norm(x, p["norm"], cfg.norm_eps))
+    return shard(x + h, "batch", "seq", "embed")
+
+
+def _mamba2_block(cfg: ModelConfig, p: Tree, x: jax.Array) -> jax.Array:
+    h, _ = mamba2(cfg, p, rms_norm(x, p["norm"], cfg.norm_eps))
+    return shard(x + h, "batch", "seq", "embed")
+
+
+def forward(cfg: ModelConfig, params: Tree, batch: Tree,
+            remat: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, V) in fp32."""
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params = _cast(params, f)
+    x = _embed_tokens(cfg, params, batch)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(carry, p):
+            return _dense_block(cfg, p, carry, positions), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif cfg.family == "ssm":
+        def body(carry, p):
+            return _ssm_block(cfg, p, carry), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def inner(carry, p):
+            return _mamba2_block(cfg, p, carry), None
+        if remat:
+            inner = jax.checkpoint(inner)
+
+        def group(carry, pg):
+            h, _ = jax.lax.scan(inner, carry, pg)
+            a, _ = attention(cfg, shared["attn"],
+                             rms_norm(h, shared["norm1"], cfg.norm_eps),
+                             positions)
+            h = h + a
+            h = h + mlp(cfg, shared["mlp"],
+                        rms_norm(h, shared["norm2"], cfg.norm_eps))
+            return shard(h, "batch", "seq", "embed"), None
+        if remat:
+            group = jax.checkpoint(group)
+        x, _ = jax.lax.scan(group, x, params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = shard(params.get("lm_head", params["embed"]), "vocab", None)
+    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: Tree,
+            remat: bool = True) -> jax.Array:
+    logits = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: keeps the vocab dim
+    # sharded (a gather across vocab shards would force GSPMD to replicate
+    # the full (B, S, V) logits — 37 GiB/device at qwen2-0.5b train_4k).
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - gold)
+
+
+# ------------------------------------------------------------------ decode
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Tree:
+    """ParamSpec tree for the decode state (KV cache / SSM state)."""
+    B, S = batch, max_seq
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family in ("dense", "vlm", "moe"):
+        ax = ("layers", "batch", "cache_seq", None, None)
+        return {
+            "k": ParamSpec((L, B, S, K, dh), ax, "zeros", f),
+            "v": ParamSpec((L, B, S, K, dh), ax, "zeros", f),
+        }
+    if cfg.family == "ssm":
+        Di, N, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+        return {
+            "h": ParamSpec((L, B, Di, N),
+                           ("layers", "batch", "ssm_inner", None),
+                           "zeros", jnp.float32),
+            "conv": ParamSpec((L, B, k - 1, Di),
+                              ("layers", "batch", None, "ssm_inner"),
+                              "zeros", f),
+        }
+    if cfg.family == "hybrid":
+        G = L // cfg.attn_every
+        per = cfg.attn_every
+        Di, N, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+        Hs, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+        return {
+            "ssm_h": ParamSpec((G, per, B, Hs, hd, N),
+                               ("layers", "layers", "batch", "ssm_heads",
+                                None, None), "zeros", jnp.float32),
+            "ssm_conv": ParamSpec((G, per, B, k - 1, Di + 2 * N),
+                                  ("layers", "layers", "batch", None,
+                                   "ssm_inner"), "zeros", f),
+            "k": ParamSpec((G, B, S, K, dh),
+                           ("layers", "batch", "cache_seq", None, None),
+                           "zeros", f),
+            "v": ParamSpec((G, B, S, K, dh),
+                           ("layers", "batch", "cache_seq", None, None),
+                           "zeros", f),
+        }
+    raise ValueError(f"{cfg.family} has no decode state")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq), is_leaf=_is_spec)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq), is_leaf=_is_spec)
+
+
+def decode_step(cfg: ModelConfig, params: Tree, cache: Tree,
+                tokens: jax.Array, positions: jax.Array
+                ) -> Tuple[jax.Array, Tree]:
+    """One serve step: tokens (B, 1), positions (B,) -> logits (B, 1, V)."""
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params = _cast(params, f)
+    x = _embed_tokens(cfg, params, {"tokens": tokens})
+    pos2d = positions[:, None]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, xs):
+            p, ck, cv = xs
+            xn = rms_norm(carry, p["norm1"], cfg.norm_eps)
+            h, nc = attention(cfg, p["attn"], xn, pos2d,
+                              cache={"k": ck, "v": cv}, cache_pos=positions)
+            h = carry + h
+            xn = rms_norm(h, p["norm2"], cfg.norm_eps)
+            ff = moe(cfg, p["moe"], xn) if "moe" in p else mlp(cfg, p["mlp"], xn)
+            return h + ff, (nc["k"], nc["v"])
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            p, h0, conv0 = xs
+            xn = rms_norm(carry, p["norm"], cfg.norm_eps)
+            y, st = mamba1(cfg, p, xn, state={"h": h0, "conv": conv0})
+            return carry + y, (st["h"], st["conv"])
+        x, (nh, nconv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["h"], cache["conv"]))
+        new_cache = {"h": nh, "conv": nconv}
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def inner(carry, xs):
+            p, h0, conv0 = xs
+            xn = rms_norm(carry, p["norm"], cfg.norm_eps)
+            y, st = mamba2(cfg, p, xn, state={"h": h0, "conv": conv0})
+            return carry + y, (st["h"], st["conv"])
+
+        def group(carry, xs):
+            pg, h0g, conv0g, ck, cv = xs
+            h, (nh, nconv) = jax.lax.scan(inner, carry, (pg, h0g, conv0g))
+            xn = rms_norm(h, shared["norm1"], cfg.norm_eps)
+            a, nc = attention(cfg, shared["attn"], xn, pos2d,
+                              cache={"k": ck, "v": cv}, cache_pos=positions)
+            h = h + a
+            h = h + mlp(cfg, shared["mlp"],
+                        rms_norm(h, shared["norm2"], cfg.norm_eps))
+            return h, (nh, nconv, nc["k"], nc["v"])
+        x, (nh, nconv, nk, nv) = jax.lax.scan(
+            group, x, (params["blocks"], cache["ssm_h"], cache["ssm_conv"],
+                       cache["k"], cache["v"]))
+        new_cache = {"ssm_h": nh, "ssm_conv": nconv, "k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = shard(params.get("lm_head", params["embed"]), "vocab", None)
+    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab"), new_cache

@@ -1,0 +1,193 @@
+"""Parameter specs: one source of truth for shapes, logical sharding axes
+and initializers.  Materializes real arrays (training), ShapeDtypeStructs
+(dry-run) or NamedShardings (pjit in/out specs) from the same tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .sharding import param_sharding
+
+Tree = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | a_log | dt_bias
+    dtype: Any = jnp.float32
+
+
+def _attn_specs(cfg: ModelConfig, L: Optional[int]) -> Tree:
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pre = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    s: Tree = {
+        "wq": ParamSpec(pre + (D, H, dh), lax + ("p_in", "p_heads", None)),
+        "wk": ParamSpec(pre + (D, K, dh), lax + ("p_in", "p_kv_heads", None)),
+        "wv": ParamSpec(pre + (D, K, dh), lax + ("p_in", "p_kv_heads", None)),
+        "wo": ParamSpec(pre + (H * dh, D), lax + ("p_ff", "p_in")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec(pre + (H, dh), lax + ("p_heads", None), "zeros")
+        s["bk"] = ParamSpec(pre + (K, dh), lax + ("p_kv_heads", None), "zeros")
+        s["bv"] = ParamSpec(pre + (K, dh), lax + ("p_kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec(pre + (dh,), lax + (None,), "ones")
+        s["k_norm"] = ParamSpec(pre + (dh,), lax + (None,), "ones")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, L: Optional[int]) -> Tree:
+    D, F = cfg.d_model, cfg.d_ff
+    pre = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    s: Tree = {
+        "w_up": ParamSpec(pre + (D, F), lax + ("p_in", "p_ff")),
+        "w_down": ParamSpec(pre + (F, D), lax + ("p_ff", "p_in")),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        s["w_gate"] = ParamSpec(pre + (D, F), lax + ("p_in", "p_ff"))
+    return s
+
+
+def _moe_specs(cfg: ModelConfig, L: Optional[int]) -> Tree:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pre = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    s: Tree = {
+        "w_router": ParamSpec(pre + (D, E), lax + ("p_in", None)),
+        "w_up": ParamSpec(pre + (E, D, F), lax + ("p_experts", "p_in", "p_ff")),
+        "w_down": ParamSpec(pre + (E, F, D), lax + ("p_experts", "p_ff", "p_in")),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        s["w_gate"] = ParamSpec(pre + (E, D, F),
+                                lax + ("p_experts", "p_in", "p_ff"))
+    return s
+
+
+def _mamba1_specs(cfg: ModelConfig, L: int) -> Tree:
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    k = cfg.d_conv
+    pre, lax = (L,), ("layers",)
+    return {
+        "w_in": ParamSpec(pre + (D, 2 * Di), lax + ("p_in", "p_ssm_inner")),
+        "conv_w": ParamSpec(pre + (k, Di), lax + (None, "p_ssm_inner")),
+        "conv_b": ParamSpec(pre + (Di,), lax + ("p_ssm_inner",), "zeros"),
+        "w_x": ParamSpec(pre + (Di, R + 2 * N), lax + ("p_ssm_inner", None)),
+        "w_dt": ParamSpec(pre + (R, Di), lax + (None, "p_ssm_inner")),
+        "dt_bias": ParamSpec(pre + (Di,), lax + ("p_ssm_inner",), "dt_bias"),
+        "A_log": ParamSpec(pre + (Di, N), lax + ("p_ssm_inner", None), "a_log"),
+        "D_skip": ParamSpec(pre + (Di,), lax + ("p_ssm_inner",), "ones"),
+        "w_out": ParamSpec(pre + (Di, D), lax + ("p_ssm_inner", "p_in")),
+        "norm": ParamSpec(pre + (D,), lax + (None,), "ones"),
+    }
+
+
+def _mamba2_specs(cfg: ModelConfig, shape_pre: Tuple[int, ...]) -> Tree:
+    D, Di, N = cfg.d_model, cfg.d_inner, cfg.d_state
+    Hs, k = cfg.n_ssm_heads, cfg.d_conv
+    pre = shape_pre
+    lax = ("layers",) * len(shape_pre)
+    dproj = 2 * Di + 2 * N + Hs
+    return {
+        "w_in": ParamSpec(pre + (D, dproj), lax + ("p_in", None)),
+        "conv_w": ParamSpec(pre + (k, Di + 2 * N), lax + (None, None)),
+        "conv_b": ParamSpec(pre + (Di + 2 * N,), lax + (None,), "zeros"),
+        "dt_bias": ParamSpec(pre + (Hs,), lax + (None,), "dt_bias"),
+        "A_log": ParamSpec(pre + (Hs,), lax + (None,), "a_log"),
+        "D_skip": ParamSpec(pre + (Hs,), lax + (None,), "ones"),
+        "out_norm": ParamSpec(pre + (Di,), lax + (None,), "ones"),
+        "w_out": ParamSpec(pre + (Di, D), lax + ("p_ssm_inner", "p_in")),
+        "norm": ParamSpec(pre + (D,), lax + (None,), "ones"),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    specs: Tree = {
+        "embed": ParamSpec((V, D), ("p_vocab", "p_embed")),
+        "final_norm": ParamSpec((D,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((V, D), ("p_vocab", "p_embed"))
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        blocks: Tree = {
+            "attn": _attn_specs(cfg, L),
+            "norm1": ParamSpec((L, D), ("layers", None), "ones"),
+            "norm2": ParamSpec((L, D), ("layers", None), "ones"),
+        }
+        blocks["mlp" if cfg.family != "moe" else "moe"] = (
+            _mlp_specs(cfg, L) if cfg.family != "moe" else _moe_specs(cfg, L))
+        specs["blocks"] = blocks
+    elif cfg.family == "ssm":
+        specs["blocks"] = _mamba1_specs(cfg, L)
+    elif cfg.family == "hybrid":
+        n_groups = L // cfg.attn_every
+        specs["blocks"] = _mamba2_specs(cfg, (n_groups, cfg.attn_every))
+        specs["shared"] = {
+            "attn": _attn_specs(cfg, None),
+            "mlp": _mlp_specs(cfg, None),
+            "norm1": ParamSpec((D,), (None,), "ones"),
+            "norm2": ParamSpec((D,), (None,), "ones"),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = 1.0 / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * scale).astype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "a_log":
+        n = spec.shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, spec.shape).astype(spec.dtype)
+    if spec.init == "dt_bias":
+        val = float(np.log(np.expm1(0.01)))
+        return jnp.full(spec.shape, val, spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef,
+                              [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        param_specs(cfg), is_leaf=_is_spec)
+
+
+def param_shardings(cfg: ModelConfig) -> Tree:
+    """NamedSharding tree (requires an active use_sharding mesh)."""
+    return jax.tree.map(lambda s: param_sharding(s.axes, s.shape),
+                        param_specs(cfg), is_leaf=_is_spec)
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    specs = jax.tree.leaves(param_specs(cfg), is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in specs)

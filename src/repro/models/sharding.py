@@ -1,0 +1,157 @@
+"""Logical-axis sharding: params and activations carry logical axis names;
+a rules table maps them to physical mesh axes (MaxText-style).
+
+Physical mesh axes: ``pod`` (inter-pod DCN), ``data`` (batch / FSDP),
+``model`` (tensor parallel).  The default rules implement FSDP + TP:
+weights are sharded over BOTH data and model axes, activations shard batch
+over (pod, data) and attention heads / ff over model.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, Tuple[str, ...]]
+
+# logical axis name -> physical mesh axis (or tuple of them, or None)
+RuleTable = Dict[str, Axis]
+
+# The paper-faithful baseline layout (§Perf records changes against this).
+DEFAULT_RULES: RuleTable = {
+    "batch": ("pod", "data"),       # data parallel over pods and data axis
+    "seq": None,
+    "embed": None,                  # activation d_model: replicated
+    "heads": "model",               # attention heads: tensor parallel
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",                  # mlp hidden: tensor parallel
+    "vocab": "model",               # logits vocab dim
+    # parameter axes (FSDP: shard the non-TP dim over data)
+    "p_vocab": "model",
+    # embed/head tables: vocab is 'model'-sharded; the d_model dim stays
+    # replicated — sharding it over 'data' makes GSPMD batch-gather the
+    # (B,S,V) grad in the head backward (37 GiB/device, see DESIGN.md)
+    "p_embed": None,
+    "p_in": "data",                 # fsdp dim of weight matrices
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_head_dim": None,
+    "p_ff": "model",
+    "p_experts": "model",           # expert parallelism on the model axis
+    "p_ssm_inner": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",           # mamba2 per-head decode state
+    "p_state": None,
+    "state": None,
+    "layers": None,                 # stacked-scan leading axis
+    "conv": None,
+    "expert": "model",              # dispatched expert activation dim
+    "cache_seq": "model",           # KV-cache sequence dim (flash-decoding
+    #                                 style split-K over the model axis)
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh]
+    rules: RuleTable
+
+
+_ctx = threading.local()
+
+
+def _get() -> ShardingCtx:
+    if not hasattr(_ctx, "cur"):
+        _ctx.cur = ShardingCtx(None, dict(DEFAULT_RULES))
+    return _ctx.cur
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[RuleTable] = None):
+    """Activate a mesh + rule table for model construction/lowering."""
+    prev = getattr(_ctx, "cur", None)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _ctx.cur = ShardingCtx(mesh, merged)
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _ctx.cur
+        else:
+            _ctx.cur = prev
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated).
+
+    Mesh axes that don't exist on the active mesh are dropped (so the same
+    rules serve the single-pod (data, model) and multi-pod (pod, data,
+    model) meshes).  When ``shape`` is given, axes whose sizes don't divide
+    the dimension are dropped too (e.g. 8 KV heads on a 16-way model axis
+    fall back to replication instead of failing to lower).
+    """
+    ctx = _get()
+    avail = set(_mesh_axes(ctx.mesh)) if ctx.mesh is not None else set()
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)) \
+        if ctx.mesh is not None else {}
+    out = []
+    used = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        phys = ctx.rules.get(name, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        keep = []
+        quo = shape[i] if shape is not None else None
+        for a in phys:
+            if a not in avail or a in used:
+                continue
+            if quo is not None:
+                if quo % sizes[a] != 0:
+                    continue
+                quo //= sizes[a]
+            keep.append(a)
+            used.add(a)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation to the logical spec (no-op without mesh)."""
+    ctx = _get()
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec_for(logical, x.shape)))
+
+
+def param_sharding(logical: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None
+                   ) -> Optional[NamedSharding]:
+    ctx = _get()
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, spec_for(logical, shape))

@@ -1,0 +1,96 @@
+"""AdamW with global-norm clipping and linear-warmup cosine schedule.
+
+Hand-rolled (no optax dependency): state is ``{mu, nu, step}`` with mu/nu
+sharded exactly like the parameters (the dominant optimizer memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, _is_spec, param_specs
+
+Tree = Any
+
+
+class OptState(NamedTuple):
+    mu: Tree
+    nu: Tree
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def init_opt_state(params: Tree) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(z, jax.tree.map(jnp.copy, z),
+                    jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> OptState:
+    specs = param_specs(cfg)
+    ab = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), specs,
+        is_leaf=_is_spec)
+    return OptState(ab, jax.tree.map(lambda x: x, ab),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def opt_state_specs(cfg: ModelConfig) -> OptState:
+    """ParamSpec tree (for shardings) mirroring the param layout."""
+    specs = param_specs(cfg)
+    f32 = jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.axes, s.init, jnp.float32), specs,
+        is_leaf=_is_spec)
+    return OptState(f32, jax.tree.map(lambda x: x, f32, is_leaf=_is_spec),
+                    ParamSpec((), ()))
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(opt_cfg: AdamWConfig, params: Tree, grads: Tree,
+                 state: OptState) -> tuple[Tree, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt_cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state.step + 1
+    lr = _schedule(opt_cfg, state.step)
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + opt_cfg.eps)
+        u = u + opt_cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(mu, nu, step), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,40 @@
+"""Gradient compression (beyond-paper distributed-optimization trick).
+
+int8 per-tensor-scaled quantization with error feedback: the compressor
+runs *before* the cross-replica reduction so the all-reduce moves 4x fewer
+bytes for fp32 grads; the residual is carried to the next step.  Off by
+default; §Perf measures the collective-term effect.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def compress_grads(grads: Tree, residual: Optional[Tree] = None
+                   ) -> Tuple[Tree, Tree, Tree]:
+    """Returns (q_int8, scales, new_residual)."""
+    if residual is not None:
+        grads = jax.tree.map(lambda g, r: g + r, grads, residual)
+
+    def q(g):
+        a = jnp.max(jnp.abs(g)) + 1e-12
+        scale = a / 127.0
+        qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return qi, scale
+
+    flat, tdef = jax.tree.flatten(grads)
+    qs = [q(g) for g in flat]
+    qi = jax.tree.unflatten(tdef, [x[0] for x in qs])
+    sc = jax.tree.unflatten(tdef, [x[1] for x in qs])
+    deq = jax.tree.map(lambda i, s: i.astype(jnp.float32) * s, qi, sc)
+    new_res = jax.tree.map(lambda g, d: g - d, grads, deq)
+    return qi, sc, new_res
+
+
+def decompress_grads(qi: Tree, scales: Tree) -> Tree:
+    return jax.tree.map(lambda i, s: i.astype(jnp.float32) * s, qi, scales)

@@ -1,0 +1,4 @@
+from .cost_model import HW, layer_costs, stage_graph_costs
+from .placement import PlacementPlan, plan_placement, tpu_slice_topology
+from .taskgraph import (model_stage_graph, pipeline_graph,
+                        serving_query_graph)

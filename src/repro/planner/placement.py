@@ -1,0 +1,107 @@
+"""HVLB_CC-driven placement of stage graphs onto TPU mesh slices.
+
+The production mesh is carved into pipeline slices ("processors" in the
+paper's model).  Slice execution rates come from chips x peak x MFU —
+heterogeneity enters through degraded slices (stragglers, mixed
+generations).  Links: intra-pod slice boundaries ride ICI; the pod
+boundary rides shared DCN (the "gateway" of the paper's Fig. 2 — a slower
+shared bus with real contention).
+
+``plan_placement`` runs HSV_CC (baseline) and HVLB_CC (A/B) on the graph
+and returns assignments + predicted step makespans.  Re-planning with
+measured rates is the framework's straggler-mitigation path: static
+re-scheduling, exactly the paper's answer for time-predictable systems.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (Topology, schedule_hsv_cc, schedule_hvlb_cc,
+                        load_balance)
+from repro.core.graph import SPG
+from repro.core.scheduler import Schedule
+
+from .cost_model import HW
+
+
+def tpu_slice_topology(n_slices: int = 8, chips_per_slice: int = 64,
+                       pods: int = 2, hw: HW = HW(),
+                       degraded: Optional[Dict[int, float]] = None
+                       ) -> Topology:
+    """Slices on a ring of ICI links; one shared DCN bus joins the pods.
+
+    Link speeds are bytes/s; task weights are FLOPs and rates FLOP/s, so
+    all schedule times come out in seconds.
+    """
+    degraded = degraded or {}
+    rates = np.array([chips_per_slice * hw.peak_flops * hw.mfu *
+                      degraded.get(i, 1.0) for i in range(n_slices)])
+    per_pod = n_slices // pods
+    links: Dict[str, float] = {}
+    routes: Dict[Tuple[int, int], List[Tuple[str, ...]]] = {}
+    # ICI boundary link between adjacent slices within a pod; the slice
+    # boundary crosses `chips_per_slice`-worth of ICI edge bandwidth.
+    ici_boundary = hw.ici_bw * hw.ici_links * np.sqrt(chips_per_slice)
+    for i in range(n_slices - 1):
+        same_pod = (i // per_pod) == ((i + 1) // per_pod)
+        links[f"l{i}"] = ici_boundary if same_pod else hw.dcn_bw * 8
+    # single shared DCN bus for any cross-pod hop (contention point)
+    links["dcn"] = hw.dcn_bw * 8
+    for a in range(n_slices):
+        for b in range(a + 1, n_slices):
+            if (a // per_pod) == (b // per_pod):
+                routes[(a, b)] = [tuple(f"l{i}" for i in range(a, b))]
+            else:
+                pre = tuple(f"l{i}" for i in range(a, per_pod * (a // per_pod + 1) - 1))
+                post = tuple(f"l{i}" for i in range(per_pod * (b // per_pod), b))
+                routes[(a, b)] = [pre + ("dcn",) + post]
+    return Topology([f"slice{i}" for i in range(n_slices)], rates, links,
+                    routes)
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    schedule: Schedule
+    algorithm: str
+    makespan_s: float
+    load_balance: float
+    assignment: Dict[int, int]          # stage -> slice
+
+    @property
+    def stage_map(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for t, s in self.assignment.items():
+            out.setdefault(s, []).append(t)
+        return out
+
+
+def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
+                   alpha_max: float = 3.0) -> PlacementPlan:
+    if algorithm == "hsv":
+        s = schedule_hsv_cc(g, tg)
+    elif algorithm == "hvlb_a":
+        s = schedule_hvlb_cc(g, tg, variant="A", alpha_max=alpha_max,
+                             alpha_step=0.05).best
+    elif algorithm == "hvlb_b":
+        s = schedule_hvlb_cc(g, tg, variant="B", alpha_max=alpha_max,
+                             alpha_step=0.05).best
+    else:
+        raise ValueError(algorithm)
+    return PlacementPlan(
+        schedule=s, algorithm=algorithm, makespan_s=s.makespan,
+        load_balance=load_balance(s),
+        assignment={i: int(s.proc[i]) for i in range(g.n)})
+
+
+def replan(g: SPG, tg: Topology, measured_rates: Sequence[float],
+           algorithm: str = "hvlb_b") -> PlacementPlan:
+    """Straggler mitigation: re-run the static scheduler with observed
+    slice rates (the paper's time-predictable alternative to dynamic
+    work stealing)."""
+    tg2 = Topology(tg.proc_names, np.asarray(measured_rates, float),
+                   dict(tg.link_speed), dict(tg.routes),
+                   ctml_mode=tg.ctml_mode)
+    return plan_placement(g, tg2, algorithm)

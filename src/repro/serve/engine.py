@@ -1,0 +1,113 @@
+"""Streaming DSMS serving engine — the paper's application layer on top of
+the model runtime.
+
+Queries are registered ahead of time (the DSMS principle: register once,
+execute continuously); each query is an operator chain over the decoded
+model output (the "stream").  The engine:
+
+  1. builds the serving SPG (backbone + query operators),
+  2. statically schedules it with HVLB_CC (B) onto the slice topology
+     (HSV_CC cannot order these multi-sink graphs — Section 3.2),
+  3. runs batched decode steps, executing query operators according to
+     the static schedule,
+  4. supports imprecise-computation queries: each operator has a mandatory
+     function and an optional refinement that only runs inside its
+     schedule hole (HVLB_CC_IC, Section 4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.core import schedule_holes, schedule_hvlb_cc
+from repro.core.graph import SPG
+from repro.models import model as M
+from repro.planner import serving_query_graph, tpu_slice_topology
+
+
+@dataclasses.dataclass
+class Query:
+    name: str
+    mandatory: Callable[[jax.Array], Any]
+    optional: Optional[Callable[[Any], Any]] = None
+    # estimated cost ratio of optional part vs mandatory (for IC planning)
+    optional_ratio: float = 1.0
+
+
+@dataclasses.dataclass
+class StepResult:
+    tokens: np.ndarray
+    query_outputs: Dict[str, Any]
+    precise: Dict[str, bool]
+
+
+class DSMSEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int,
+                 max_seq: int, n_slices: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.queries: List[Query] = []
+        self.cache = M.init_cache(cfg, batch_size, max_seq)
+        self.pos = 0
+        self._step = jax.jit(
+            lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))
+        self.topology = tpu_slice_topology(n_slices=n_slices,
+                                           chips_per_slice=4, pods=1)
+        self.plan = None
+        self.holes: Dict[int, float] = {}
+
+    def register(self, q: Query) -> None:
+        """Register a continuous query (before streaming starts)."""
+        self.queries.append(q)
+        self._replan()
+
+    def _replan(self) -> None:
+        shape = dataclasses.replace(SHAPES["decode_32k"],
+                                    global_batch=self.batch,
+                                    seq_len=self.max_seq)
+        g = serving_query_graph(self.cfg, shape,
+                                n_queries=max(1, len(self.queries)))
+        res = schedule_hvlb_cc(g, self.topology, variant="B",
+                               alpha_max=2.0, alpha_step=0.1)
+        self.plan = res.best
+        self.holes = schedule_holes(self.plan)
+        # map query q to its first operator node (backbone is nodes [0..k))
+        n_backbone = g.n - 3 * max(1, len(self.queries))
+        self._query_nodes = {qi: n_backbone + 3 * qi
+                             for qi in range(len(self.queries))}
+
+    def _has_hole(self, qi: int, q: Query) -> bool:
+        node = self._query_nodes.get(qi)
+        if node is None or self.plan is None:
+            return False
+        hole = self.holes.get(node, 0.0)
+        g = self.plan.graph
+        mand = g.comp(node, int(self.plan.proc[node]), self.topology.rates)
+        return hole >= q.optional_ratio * mand
+
+    def step(self, tokens: np.ndarray) -> StepResult:
+        """Feed one token per stream; run queries per the static plan."""
+        t = jnp.asarray(tokens.reshape(self.batch, 1), jnp.int32)
+        pos = jnp.full((self.batch,), self.pos, jnp.int32)
+        logits, self.cache = self._step(self.params, self.cache, t, pos)
+        self.pos += 1
+        out_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        outputs: Dict[str, Any] = {}
+        precise: Dict[str, bool] = {}
+        for qi, q in enumerate(self.queries):
+            res = q.mandatory(logits)
+            ok = False
+            if q.optional is not None and self._has_hole(qi, q):
+                res = q.optional(res)
+                ok = True
+            outputs[q.name] = res
+            precise[q.name] = ok or q.optional is None
+        return StepResult(out_tok, outputs, precise)

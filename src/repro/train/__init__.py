@@ -1,0 +1,1 @@
+from .step import batch_shardings, make_serve_step, make_train_step

@@ -1,0 +1,104 @@
+"""Train/serve step factories with mesh-aware shardings.
+
+``make_train_step`` returns a function (params, opt_state, batch) ->
+(params, opt_state, metrics); ``make_serve_step`` returns
+(params, cache, tokens, positions) -> (logits, cache).  Both are meant to
+be ``jax.jit``-ed with the sharding trees from the same factories.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.params import ParamSpec, _is_spec, param_shardings
+from repro.models.sharding import param_sharding, spec_for
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.adamw import OptState, opt_state_specs
+
+Tree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = True, microbatch: int = 1):
+    """One optimizer step.  ``microbatch > 1`` splits the global batch into
+    sequential accumulation steps (memory knob for the perf loop)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss(p, b):
+        return M.loss_fn(cfg, p, b, remat=remat)
+
+    def step(params: Tree, opt: OptState, batch: Tree
+             ) -> Tuple[Tree, OptState, Dict[str, jax.Array]]:
+        if microbatch <= 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, b):
+                l_acc, g_acc = carry
+                li, gi = jax.value_and_grad(loss)(params, b)
+                return (l_acc + li,
+                        jax.tree.map(jnp.add, g_acc, gi)), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (l, grads), _ = jax.lax.scan(acc_fn, (0.0, zeros), mb)
+            l = l / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        new_params, new_opt, info = adamw_update(opt_cfg, params, grads, opt)
+        info["loss"] = l
+        return new_params, new_opt, info
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params: Tree, cache: Tree, tokens: jax.Array,
+             positions: jax.Array):
+        return M.decode_step(cfg, params, cache, tokens, positions)
+    return step
+
+
+# -------------------------------------------------------------- shardings
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Tree:
+    """NamedSharding tree matching configs.base.input_specs."""
+    def ns(*logical, dims=None):
+        return NamedSharding(mesh, spec_for(logical, dims))
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out: Tree = {}
+        if cfg.embed_inputs:
+            out["embeds"] = ns("batch", "seq", "embed",
+                               dims=(B, S, cfg.d_model))
+        else:
+            out["tokens"] = ns("batch", "seq", dims=(B, S))
+            if cfg.vision_prefix:
+                out["vision_embeds"] = ns("batch", "seq", "embed",
+                                          dims=(B, S // 4, cfg.d_model))
+        if shape.kind == "train":
+            out["labels"] = ns("batch", "seq", dims=(B, S))
+        return out
+    return {
+        "tokens": ns("batch", None, dims=(B, 1)),
+        "positions": ns("batch", dims=(B,)),
+    }
+
+
+def opt_shardings(cfg: ModelConfig) -> OptState:
+    specs = opt_state_specs(cfg)
+    return jax.tree.map(lambda s: param_sharding(s.axes, s.shape), specs,
+                        is_leaf=_is_spec)
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_seq: int) -> Tree:
+    specs = M.cache_specs(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: param_sharding(s.axes, s.shape), specs,
+                        is_leaf=_is_spec)

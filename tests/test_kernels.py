@@ -1,0 +1,87 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan.kernel import selective_scan_kernel
+from repro.kernels.ssm_scan.ref import selective_scan_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,d", [
+    (1, 4, 4, 256, 64),         # MHA
+    (2, 8, 2, 256, 64),         # GQA 4:1
+    (1, 4, 1, 512, 128),        # MQA, larger S and head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=128,
+                                 block_k=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("block_q,block_k", [(128, 128), (128, 256)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    B, Hq, Hkv, S, d = 1, 2, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=True, block_q=block_q,
+                                 block_k=block_k, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,Di,N", [
+    (1, 256, 512, 16),
+    (2, 512, 256, 8),
+    (1, 256, 1024, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan_matches_ref(B, S, Di, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, Di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di), dtype) - 2)
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N), jnp.float32) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N), dtype)
+    out = selective_scan_kernel(x, dt, A, Bm, Cm, block_d=min(256, Di),
+                                block_s=128, interpret=True)
+    ref = selective_scan_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_selective_scan_state_carry_across_seq_blocks():
+    """The h carry must flow across grid steps on the sequence axis."""
+    B, S, Di, N = 1, 512, 128, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, Di), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)) - 2)
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    small = selective_scan_kernel(x, dt, A, Bm, Cm, block_d=128,
+                                  block_s=64, interpret=True)
+    big = selective_scan_kernel(x, dt, A, Bm, Cm, block_d=128,
+                                block_s=512, interpret=True)
+    np.testing.assert_allclose(np.asarray(small), np.asarray(big),
+                               rtol=1e-5, atol=1e-5)

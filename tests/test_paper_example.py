@@ -1,0 +1,138 @@
+"""Pin every number the paper states for its worked example (Figs. 2-6,
+Tables 1-4) — the faithful-reproduction anchor tests."""
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_COMP_EXP5, paper_spg, paper_topology,
+                        schedule_holes, schedule_hsv_cc, schedule_hvlb_cc)
+from repro.core.ranks import (hprv_a, hprv_b, hrank, priority_queue,
+                              rank_matrix)
+
+# Table 2 of the paper (rank per processor, hrank).
+TABLE2_RANK_P1 = [145.0, 133.0, 109.0, 109.0, 85.0, 50.0, 67.0, 48.0, 20.0, 15.0]
+TABLE2_RANK_P2 = [81.66, 74.99, 61.66, 61.66, 48.33, 29.67, 38.33, 28.0, 13.0, 10.0]
+TABLE2_RANK_P3 = [96.99, 90.33, 73.67, 73.67, 57.0, 36.0, 45.33, 34.33, 16.0, 12.0]
+TABLE2_HRANK = [107.9, 99.4, 81.4, 81.4, 63.4, 38.6, 50.2, 36.8, 16.3, 12.3]
+TABLE2_DEPTH = [1, 1, 1, 2, 2, 2, 3, 3, 4, 4]
+TABLE2_OUTD = [2, 2, 2, 2, 2, 1, 1, 1, 0, 0]
+
+
+@pytest.fixture(scope="module")
+def case():
+    g = paper_spg()
+    tg = paper_topology()
+    return g, tg
+
+
+def test_route_speeds_table3(case):
+    _, tg = case
+    assert tg.route_speed(0, 1) == 1.0
+    assert tg.route_speed(0, 2) == 1.0
+    assert tg.route_speed(1, 2) == 2.0
+    # symmetric
+    assert tg.route_speed(2, 1) == 2.0
+
+
+def test_processor_transfer_speeds(case):
+    _, tg = case
+    assert tg.proc_speed(0) == pytest.approx(1.0)
+    assert tg.proc_speed(1) == pytest.approx(1.5)
+    assert tg.proc_speed(2) == pytest.approx(1.5)
+
+
+def test_computation_times_table1(case):
+    g, tg = case
+    assert g.comp(5, 0, tg.rates) == 15   # n6 on p1
+    assert g.comp(5, 1, tg.rates) == 10
+    assert g.comp(5, 2, tg.rates) == 12
+
+
+def test_depth_and_outdegree(case):
+    g, _ = case
+    assert list(g.depth) == TABLE2_DEPTH
+    assert [g.outd(i) for i in range(10)] == TABLE2_OUTD
+    assert sorted(g.pred[4]) == [0, 1, 2]       # pred(n5) = {n1,n2,n3}
+    assert sorted(g.succ[4]) == [6, 7]          # succ(n5) = {n7,n8}
+
+
+def test_rank_matrix_table2(case):
+    g, tg = case
+    r = rank_matrix(g, tg)
+    np.testing.assert_allclose(r[:, 0], TABLE2_RANK_P1, atol=0.02)
+    np.testing.assert_allclose(r[:, 1], TABLE2_RANK_P2, atol=0.02)
+    np.testing.assert_allclose(r[:, 2], TABLE2_RANK_P3, atol=0.02)
+    np.testing.assert_allclose(r.mean(1), TABLE2_HRANK, atol=0.06)
+
+
+def test_priority_queues_section43(case):
+    g, tg = case
+    r = rank_matrix(g, tg)
+    h = r.mean(1)
+    qa = [i + 1 for i in priority_queue(hprv_a(g, tg, r), h)]
+    qb = [i + 1 for i in priority_queue(hprv_b(g, tg, r), h)]
+    assert qa == [1, 2, 3, 4, 5, 7, 6, 8, 9, 10]
+    assert qb == [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]
+
+
+def test_hsv_cc_makespan_73_fig4(case):
+    g, tg = case
+    s = schedule_hsv_cc(g, tg)
+    s.validate()
+    assert s.makespan == pytest.approx(73.0)
+    # Section 3.1: p1 unused; 6 tasks on p2, 4 on p3.
+    assert len(s.tasks_on(0)) == 0
+    assert len(s.tasks_on(1)) == 6
+    assert len(s.tasks_on(2)) == 4
+    # Section 3.1: l2 and l4 only carry the n3 -> n6 message.
+    ivs = s.link_intervals()
+    assert [e for (_, _, e) in ivs.get("l2", [])] == [(2, 5)]
+    assert [e for (_, _, e) in ivs.get("l4", [])] == [(2, 5)]
+    assert "l1" not in ivs                      # l1 never used
+
+
+@pytest.mark.parametrize("variant", ["A", "B"])
+def test_hvlb_cc_makespan_62_fig6(case, variant):
+    g, tg = case
+    res = schedule_hvlb_cc(g, tg, variant=variant, alpha_max=3.0,
+                           period=150.0)
+    res.best.validate()
+    assert res.best.makespan == pytest.approx(62.0)
+    # all three processors are used (the LB improvement of Fig. 6)
+    assert all(len(res.best.tasks_on(p)) > 0 for p in range(3))
+
+
+def test_hvlb_b_alpha_window_fig5(case):
+    """Fig. 5: HVLB_CC (B) reaches 62 exactly for alpha in [1.06, 1.10]
+    and gives 71 at alpha = 0 (period = 150 reproduces the paper's axis)."""
+    g, tg = case
+    res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0, period=150.0)
+    curve = dict((round(a, 2), m) for a, m in res.curve)
+    assert curve[0.0] == pytest.approx(71.0)
+    for a in (1.06, 1.08, 1.10):
+        assert curve[a] == pytest.approx(62.0)
+    assert curve[1.05] != pytest.approx(62.0)
+    assert curve[1.11] != pytest.approx(62.0)
+
+
+def test_hvlb_a_alpha_zero_is_hsv(case):
+    g, tg = case
+    res = schedule_hvlb_cc(g, tg, variant="A", alpha_max=0.0, period=150.0)
+    assert res.best.makespan == pytest.approx(73.0)   # == HSV_CC
+
+
+def test_exp5_schedule_holes():
+    """Experiment 5 (Table 4): the hole search finds exploitable idle slots.
+
+    Paper quotes holes 9/5/12 for n2/n5/n8 from its (unpublished) Exp-5
+    Gantt; under our validated timing model the best HVLB_CC schedule has
+    holes after n1 (11) and n8 (9) — pinned here, deviation documented in
+    DESIGN.md §9.  The qualitative claim (holes exist and absorb optional
+    parts) is what Experiment 5's benchmark reproduces.
+    """
+    g = paper_spg(comp=PAPER_COMP_EXP5)
+    tg = paper_topology()
+    res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0, period=150.0)
+    holes = schedule_holes(res.best)
+    assert holes, "best schedule must expose schedule holes"
+    assert holes.get(0, 0.0) == pytest.approx(11.0)
+    assert holes.get(7, 0.0) == pytest.approx(9.0)

@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the scheduler invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (SchedulingFailure, load_balance, paper_topology,
+                        random_spg, schedule_hsv_cc, schedule_hvlb_cc, slr,
+                        speedup)
+from repro.core.ranks import hprv_b, priority_queue, rank_matrix
+from repro.core.scheduler import list_schedule
+
+SETTINGS = settings(max_examples=25, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+def _graph(seed, n, ccr=1.0, constrained=True):
+    rng = np.random.default_rng(seed)
+    tg = paper_topology()
+    g = random_spg(n, rng, ccr=ccr, tg=tg, outdeg_constraint=constrained)
+    return g, tg
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40))
+@SETTINGS
+def test_schedule_validity_invariants(seed, n):
+    """Precedence, per-processor exclusivity, per-link exclusivity, task
+    durations, message timing — for every random constrained graph."""
+    g, tg = _graph(seed, n)
+    s = schedule_hsv_cc(g, tg)
+    s.validate()
+    res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
+                           alpha_step=0.25)
+    res.best.validate()
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40))
+@SETTINGS
+def test_hvlb_never_worse_than_hsv(seed, n):
+    """The alpha sweep includes alpha=0 == HSV_CC, so min makespan over
+    the sweep can never exceed HSV_CC's (with the HSV priority order)."""
+    g, tg = _graph(seed, n)
+    hsv = schedule_hsv_cc(g, tg)
+    hvlb = schedule_hvlb_cc(g, tg, variant="A", alpha_max=2.0,
+                            alpha_step=0.25)
+    assert hvlb.best.makespan <= hsv.makespan + 1e-9
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40))
+@SETTINGS
+def test_metrics_bounds(seed, n):
+    g, tg = _graph(seed, n)
+    s = schedule_hsv_cc(g, tg)
+    assert slr(s) >= 1.0 - 1e-9              # makespan >= critical path
+    assert speedup(s) > 0
+    assert load_balance(s) >= 1.0 - 1e-9     # makespan >= avg proc load
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40))
+@SETTINGS
+def test_depth2_indicator_never_fails(seed, n):
+    """The 0%-SFR theorem: HPRV_B (indicator form) respects precedence on
+    ANY random DAG (unconstrained out-degrees)."""
+    g, tg = _graph(seed, n, constrained=False)
+    r = rank_matrix(g, tg)
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    pos = {t: i for i, t in enumerate(q)}
+    assert all(pos[i] < pos[j] for (i, j) in g.edges)
+    s = list_schedule(g, tg, q, r, alpha=0.0)   # must not raise
+    s.validate()
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 30),
+       ccr=st.sampled_from([0.1, 1.0, 10.0]))
+@SETTINGS
+def test_makespan_scales_with_ccr(seed, n, ccr):
+    """Sanity: schedules stay valid across the CCR regimes of Exp. 3."""
+    g, tg = _graph(seed, n, ccr=ccr)
+    s = schedule_hsv_cc(g, tg)
+    s.validate()
+    assert s.makespan > 0
+
+
+def test_brute_force_optimality_gap_small_graphs():
+    """On tiny graphs, HVLB_CC's best schedule is close to the brute-force
+    assignment optimum under the same timing model."""
+    import itertools
+    from repro.core.scheduler import _route_message
+
+    rng = np.random.default_rng(3)
+    tg = paper_topology()
+    gaps = []
+    for trial in range(5):
+        g = random_spg(7, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+        hvlb = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0,
+                                alpha_step=0.05).best
+        order = g.topo_order
+        best = np.inf
+        for assign in itertools.product(range(3), repeat=g.n):
+            proc_free = np.zeros(3)
+            link_free = {}
+            aft = np.zeros(g.n)
+            for j in order:
+                p = assign[j]
+                arrival = 0.0
+                for i in sorted(g.pred[j], key=lambda i: (aft[i], i)):
+                    if assign[i] == p:
+                        arrival = max(arrival, aft[i])
+                        continue
+                    m = _route_message(g, tg, i, j, assign[i], p, aft[i],
+                                       link_free)
+                    for (l, st_, fi) in m.intervals:
+                        link_free[l] = max(link_free.get(l, 0.0), fi)
+                    arrival = max(arrival, m.lft)
+                est = max(proc_free[p], arrival)
+                aft[j] = est + g.comp(j, p, tg.rates)
+                proc_free[p] = aft[j]
+            best = min(best, aft.max())
+        gaps.append(hvlb.makespan / best)
+    assert np.mean(gaps) < 1.35, gaps     # near-optimal on average

@@ -1,0 +1,142 @@
+"""Checkpointing (incl. elastic resharding), data pipeline determinism,
+gradient compression, planner placement, serving engine."""
+import os
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import SHAPES, get_arch, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models.params import init_params
+from repro.optim import AdamWConfig, compress_grads, decompress_grads
+from repro.optim.adamw import init_opt_state
+from repro.planner import (model_stage_graph, pipeline_graph,
+                           plan_placement, serving_query_graph,
+                           tpu_slice_topology)
+from repro.planner.placement import replan
+from repro.train import make_train_step
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    save(str(tmp_path), 7, {"params": params, "opt": opt})
+    assert latest_step(str(tmp_path)) == 7
+    back = restore(str(tmp_path), 7, {"params": params, "opt": opt})
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_publish(tmp_path):
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    save(str(tmp_path), 1, {"params": params})
+    save(str(tmp_path), 2, {"params": params})
+    # a stale temp dir must never be picked up
+    (tmp_path / ".tmp_step_3").mkdir()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save unsharded, restore onto an explicit 1-device mesh sharding
+    (the resharding path used for elastic scale-up/down)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    save(str(tmp_path), 1, {"params": params})
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    back = restore(str(tmp_path), 1, {"params": params},
+                   shardings={"params": sh})
+    leaf = jax.tree.leaves(back["params"])[0]
+    assert leaf.sharding.mesh.shape["data"] == 1
+
+
+def test_train_restart_exact(tmp_path):
+    """Crash/restart: N steps straight == k steps + restore + N-k steps."""
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, vocab=128)
+    shape = ShapeConfig("t", 32, 2, "train")
+    pipe = SyntheticTokenPipeline(cfg, shape)
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(warmup_steps=2,
+                                                       total_steps=6)))
+
+    def run(params, opt, start, stop):
+        for s in range(start, stop):
+            batch = pipe.device_batch(s)
+            params, opt, info = step_fn(params, opt, batch)
+        return params, opt, info
+
+    p0 = init_params(cfg, jax.random.PRNGKey(0))
+    o0 = init_opt_state(p0)
+    pa, oa, ia = run(p0, o0, 0, 6)
+
+    p1 = init_params(cfg, jax.random.PRNGKey(0))
+    o1 = init_opt_state(p1)
+    p1, o1, _ = run(p1, o1, 0, 3)
+    save(str(tmp_path), 3, {"params": p1, "opt": o1})
+    st = restore(str(tmp_path), 3, {"params": p1, "opt": o1})
+    pb, ob, ib = run(st["params"], st["opt"], 3, 6)
+    np.testing.assert_allclose(float(ia["loss"]), float(ib["loss"]),
+                               rtol=1e-5)
+
+
+def test_data_pipeline_deterministic():
+    cfg = reduced_config(get_arch("qwen3-8b"))
+    shape = ShapeConfig("t", 64, 4, "train")
+    pipe = SyntheticTokenPipeline(cfg, shape, DataConfig(seed=42))
+    a = pipe.batch_for_step(5)
+    b = pipe.batch_for_step(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.batch_for_step(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_gradient_compression_error_feedback():
+    g = {"w": jnp.array([0.5, -1.0, 0.25, 3.0]),
+         "b": jnp.array([1e-3, -1e-3])}
+    qi, sc, res = compress_grads(g)
+    deq = decompress_grads(qi, sc)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(deq[k]), np.asarray(g[k]),
+                                   atol=float(np.max(np.abs(g[k]))) / 100)
+    # residual carries the quantization error exactly
+    for k in g:
+        np.testing.assert_allclose(np.asarray(g[k] - deq[k]),
+                                   np.asarray(res[k]), atol=1e-7)
+
+
+def test_planner_pipeline_balances_and_avoids_straggler():
+    cfg = get_arch("qwen3-8b")
+    g = pipeline_graph(cfg, SHAPES["train_4k"], n_microbatches=8)
+    tg = tpu_slice_topology(n_slices=8, chips_per_slice=32, pods=2)
+    plan = plan_placement(g, tg, "hvlb_b")
+    assert len(plan.stage_map) == 8                  # all slices used
+    assert plan.load_balance < 1.2
+    tg_bad = tpu_slice_topology(n_slices=8, chips_per_slice=32, pods=2,
+                                degraded={3: 0.5})
+    plan2 = replan(g, tg_bad, [r for r in tg_bad.rates], "hvlb_b")
+    # the degraded slice receives less work than healthy slices
+    loads = plan2.schedule.proc_loads()
+    assert loads[3] <= loads.max()
+
+
+def test_planner_dsms_graph_needs_hvlb_b():
+    """HSV_CC fails on the multi-query serving SPG; HVLB_CC (B) plans it."""
+    from repro.core.scheduler import SchedulingFailure
+    cfg = get_arch("zamba2-2.7b")
+    q = serving_query_graph(cfg, SHAPES["decode_32k"], n_queries=3)
+    tg = tpu_slice_topology(n_slices=8, chips_per_slice=32, pods=2)
+    with pytest.raises(SchedulingFailure):
+        plan_placement(q, tg, "hsv")
+    plan = plan_placement(q, tg, "hvlb_b")
+    plan.schedule.validate()

@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the paper's system: scheduler -> planner
+-> model runtime -> serving, wired together."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.core import paper_spg, paper_topology, schedule_hvlb_cc
+from repro.data import SyntheticTokenPipeline
+from repro.models.params import init_params
+from repro.optim import AdamWConfig
+from repro.optim.adamw import init_opt_state
+from repro.planner import (pipeline_graph, plan_placement,
+                           tpu_slice_topology)
+from repro.serve import DSMSEngine, Query
+from repro.train import make_train_step
+
+
+def test_end_to_end_schedule_to_training():
+    """The paper's planner chooses a placement; training runs under it."""
+    cfg = reduced_config(get_arch("qwen3-8b"))
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, vocab=128)
+    # 1. plan the pipeline placement with the paper's algorithm
+    g = pipeline_graph(get_arch("qwen3-8b"), SHAPES["train_4k"], 4)
+    tg = tpu_slice_topology(n_slices=4, chips_per_slice=64, pods=1)
+    plan = plan_placement(g, tg, "hvlb_b")
+    plan.schedule.validate()
+    assert plan.makespan_s > 0 and len(plan.stage_map) >= 1
+    # 2. run real training steps (the compute the plan schedules)
+    shape = ShapeConfig("t", 32, 2, "train")
+    pipe = SyntheticTokenPipeline(cfg, shape)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(warmup_steps=2,
+                                                    total_steps=4)))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    losses = []
+    for s in range(4):
+        params, opt, info = step(params, opt, pipe.device_batch(s))
+        losses.append(float(info["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_end_to_end_dsms_serving_with_imprecise_query():
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = DSMSEngine(cfg, params, batch_size=2, max_seq=16)
+    eng.register(Query("alert",
+                       mandatory=lambda lg: jnp.max(lg[:, -1], -1)))
+    eng.register(Query("topk",
+                       mandatory=lambda lg: jax.lax.top_k(lg[:, -1], 3),
+                       optional=lambda r: (r[0], r[1]),
+                       optional_ratio=0.1))
+    toks = np.zeros(2, np.int64)
+    for _ in range(4):
+        res = eng.step(toks)
+        toks = res.tokens
+        assert res.tokens.shape == (2,)
+        assert set(res.query_outputs) == {"alert", "topk"}
+    assert res.precise["alert"] is True      # no optional part -> precise
+
+
+def test_paper_example_through_planner_api():
+    """The core algorithms remain exact through the public API."""
+    res = schedule_hvlb_cc(paper_spg(), paper_topology(), variant="B",
+                           alpha_max=3.0, period=150.0)
+    assert res.best.makespan == 62.0
