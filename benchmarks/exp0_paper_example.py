@@ -13,14 +13,14 @@ from repro.core import paper_spg, paper_topology, schedule_hsv_cc, \
 from .common import row, timed
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     g, tg = paper_spg(), paper_topology()
-    s, us = timed(schedule_hsv_cc, g, tg)
+    s, us = timed(schedule_hsv_cc, g, tg, engine=engine)
     rows.append(row("exp0.hsv_cc.makespan", us, s.makespan))
     for variant in ("A", "B"):
         res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
-                        alpha_max=3.0, period=150.0)
+                        alpha_max=3.0, period=150.0, engine=engine)
         rows.append(row(f"exp0.hvlb_cc_{variant}.makespan", us,
                         res.best.makespan))
         rows.append(row(f"exp0.hvlb_cc_{variant}.best_alpha", us,

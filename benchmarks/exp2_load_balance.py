@@ -15,7 +15,7 @@ from repro.core import (load_balance, paper_topology, random_spg,
 from .common import RATE_PATTERNS, row, timed
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     n_graphs = 100 if full else 20
     alpha_max = 20.0 if full else 5.0
@@ -29,11 +29,12 @@ def run(full: bool = False) -> List[str]:
             for _ in range(n_graphs):
                 g = random_spg(n, rng, ccr=1.0, tg=tg,
                                outdeg_constraint=True)
-                s, us = timed(schedule_hsv_cc, g, tg)
+                s, us = timed(schedule_hsv_cc, g, tg, engine=engine)
                 lbs["hsv"].append(load_balance(s)); us_tot["hsv"] += us
                 for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
                     res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
-                                    alpha_max=alpha_max, alpha_step=0.05)
+                                    alpha_max=alpha_max, alpha_step=0.05,
+                                    engine=engine)
                     lbs[key].append(load_balance(res.best))
                     us_tot[key] += us
             for key, vals in lbs.items():

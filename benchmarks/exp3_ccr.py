@@ -12,7 +12,7 @@ from repro.core import (paper_topology, random_spg, schedule_hsv_cc,
 from .common import row, timed
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     n_graphs = 100 if full else 20
     alpha_max = 20.0 if full else 5.0
@@ -23,11 +23,12 @@ def run(full: bool = False) -> List[str]:
         us_tot = {k: 0.0 for k in slrs}
         for _ in range(n_graphs):
             g = random_spg(20, rng, ccr=ccr, tg=tg, outdeg_constraint=True)
-            s, us = timed(schedule_hsv_cc, g, tg)
+            s, us = timed(schedule_hsv_cc, g, tg, engine=engine)
             slrs["hsv"].append(slr(s)); us_tot["hsv"] += us
             for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
                 res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
-                                alpha_max=alpha_max, alpha_step=0.05)
+                                alpha_max=alpha_max, alpha_step=0.05,
+                                engine=engine)
                 slrs[key].append(slr(res.best)); us_tot[key] += us
         for key, vals in slrs.items():
             us = us_tot[key] / n_graphs

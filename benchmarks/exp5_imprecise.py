@@ -16,12 +16,12 @@ from repro.core import (PAPER_COMP_EXP5, paper_spg, paper_topology,
 from .common import row, timed
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     g = paper_spg(comp=PAPER_COMP_EXP5)
     tg = paper_topology()
     res, us = timed(schedule_hvlb_cc, g, tg, variant="B", alpha_max=3.0,
-                    period=150.0)
+                    period=150.0, engine=engine)
     s = res.best
     holes = schedule_holes(s)
     rows.append(row("exp5.makespan", us, s.makespan))

@@ -22,7 +22,7 @@ from repro.planner import (pipeline_graph, plan_placement,
 from .common import row, timed
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     archs = sorted(ARCHS) if full else ["qwen3-8b", "zamba2-2.7b",
                                         "dbrx-132b", "falcon-mamba-7b"]
@@ -35,7 +35,7 @@ def run(full: bool = False) -> List[str]:
         for name, topo in (("pipe", tg), ("pipe_straggler", tg_bad)):
             for alg in ("hsv", "hvlb_b"):
                 try:
-                    plan, us = timed(plan_placement, g, topo, alg)
+                    plan, us = timed(plan_placement, g, topo, alg, engine=engine)
                     rows.append(row(f"exp6.{arch}.{name}.{alg}.makespan_ms",
                                     us, plan.makespan_s * 1e3))
                     rows.append(row(f"exp6.{arch}.{name}.{alg}.lb",
@@ -46,7 +46,7 @@ def run(full: bool = False) -> List[str]:
         q = serving_query_graph(cfg, SHAPES["decode_32k"], n_queries=3)
         for alg in ("hsv", "hvlb_b"):
             try:
-                plan, us = timed(plan_placement, q, tg, alg)
+                plan, us = timed(plan_placement, q, tg, alg, engine=engine)
                 rows.append(row(f"exp6.{arch}.dsms.{alg}.makespan_ms",
                                 us, plan.makespan_s * 1e3))
             except SchedulingFailure:

@@ -1,6 +1,7 @@
 """Core paper algorithms: contention-aware, load-balanced static list
 scheduling for stream-processing DAGs on heterogeneous processors/networks.
 """
+from .engine import CompiledInstance
 from .graph import PAPER_COMP, PAPER_COMP_EXP5, PAPER_EDGES, SPG, paper_spg
 from .hsv_cc import schedule_hsv_cc
 from .hvlb_cc import SweepResult, schedule_hvlb_cc, schedule_hvlb_cc_best
@@ -13,6 +14,7 @@ from .tgff import random_spg
 from .topology import Topology, fully_switched_topology, paper_topology
 
 __all__ = [
+    "CompiledInstance",
     "SPG", "paper_spg", "PAPER_EDGES", "PAPER_COMP", "PAPER_COMP_EXP5",
     "Topology", "paper_topology", "fully_switched_topology",
     "rank_matrix", "hrank", "hprv_a", "hprv_b", "ldet_cc", "priority_queue",

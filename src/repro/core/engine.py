@@ -1,0 +1,283 @@
+"""Compiled scheduling engine: array-based core for the Eq. 10-15 loop.
+
+``list_schedule`` in :mod:`.scheduler` is the readable reference: every
+candidate evaluation copies a string-keyed ``link_free`` dict, re-walks
+route tuples through method calls, and allocates a ``MessagePlacement``
+per route probed.  :class:`CompiledInstance` preprocesses an
+``(SPG, Topology)`` pair once —
+
+  * link names interned to integer ids (``Topology.link_index`` order),
+  * route tables flattened to ``(link_id, link_speed)`` tuples per
+    ``(src, dst)`` pair,
+  * per-(edge, source-processor) communication volumes ``tpl(e_ij | p)``,
+  * the cached ``(n, P)`` computation matrix, the rank/LDET matrices and
+    the default period
+
+— and then runs the selection loop against flat Python lists with
+commit/rollback of link state instead of per-candidate dict copies.  Every
+floating-point operation is performed in the same order as the reference,
+so the produced :class:`~.scheduler.Schedule` is bit-identical (asserted
+by ``tests/test_engine_equivalence.py``).
+
+The engine additionally supports *decision-trace interval skipping* for
+the HVLB_CC alpha sweep (Algorithm 1).  Along a fixed trace (sequence of
+chosen processors) every candidate's selection value is linear in alpha:
+
+    value_p(a) = A_p + B_p * a,   A_p = EFT_p * LDET_p,
+                                  B_p = A_p * load_p / period
+
+so after simulating one alpha the engine reports the supremum alpha up to
+which every decision's winner provably keeps winning
+(:meth:`CompiledInstance.schedule_with_bound`).  Grid points strictly
+inside that interval reuse the simulated schedule without re-running the
+selection loop — consecutive alphas that would pick the same processor
+sequence skip re-simulation entirely.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import SPG
+from .ranks import ldet_cc, rank_matrix
+from .scheduler import MessagePlacement, Schedule, SchedulingFailure
+from .topology import Topology
+
+_INF = float("inf")
+
+
+class CompiledInstance:
+    """One-time preprocessing of an ``(SPG, Topology)`` pair.
+
+    Build once, then call :meth:`schedule` (or
+    :meth:`schedule_with_bound`) any number of times — the alpha sweep,
+    online re-planning, and the throughput benchmarks all share the same
+    instance.
+    """
+
+    def __init__(self, g: SPG, tg: Topology,
+                 rank: Optional[np.ndarray] = None) -> None:
+        self.g, self.tg = g, tg
+        self.P = P = tg.n_procs
+        self.n = g.n
+
+        comp = g.comp_matrix_for(tg.rates)
+        self.comp = comp
+        self._comp = comp.tolist()
+        self.rank = rank_matrix(g, tg) if rank is None else rank
+        self.ldet = ldet_cc(g, tg, self.rank)
+        self._ldet = self.ldet.tolist()
+        self.default_period = float(sum(min(row) for row in self._comp))
+
+        self._link_names = tg.all_links()
+        self._n_links = len(self._link_names)
+        link_id = tg.link_index()
+        # (src, dst) -> [(link_ids, link_speeds, route_tuple), ...] in the
+        # reference's route order (ties prefer fewer hops then route index).
+        self._routes: Dict[Tuple[int, int], List[
+            Tuple[Tuple[int, ...], Tuple[float, ...], Tuple[str, ...]]]] = {}
+        for pair, rr in tg.routes.items():
+            self._routes[pair] = [
+                (tuple(link_id[l] for l in r),
+                 tuple(float(tg.link_speed[l]) for l in r),
+                 r) for r in rr]
+        # tpl(e_ij | p_src) per edge; constant over p unless the graph uses
+        # the worked-example CCR-proportional convention.
+        self._tpl: Dict[Tuple[int, int], List[float]] = {
+            (i, j): [g.comm_volume(i, j, self._comp[i][p]) for p in range(P)]
+            for (i, j) in g.edges}
+        self._preds: List[List[int]] = [list(g.pred[j]) for j in range(g.n)]
+        self._is_exit: List[bool] = [not g.succ[j] for j in range(g.n)]
+        self._ctml_mode = tg.ctml_mode
+        # (i, j, src, dst) -> [(link_ids, ctml_per_hop, route), ...]:
+        # CTML (Eq. 15, incl. quantization) is static per edge/route, so it
+        # is computed once on first use and reused by every later candidate
+        # evaluation, alpha step, and re-plan.
+        self._msg_plans: Dict[Tuple[int, int, int, int], List[
+            Tuple[Tuple[int, ...], Tuple[float, ...],
+                  Tuple[str, ...]]]] = {}
+
+    # ------------------------------------------------------------------
+    def schedule(self, queue: Sequence[int], alpha: float = 0.0,
+                 period: Optional[float] = None) -> Schedule:
+        """Array-core equivalent of :func:`~.scheduler.list_schedule`."""
+        s, _ = self._run(queue, alpha, period, want_bound=False)
+        return s
+
+    def schedule_with_bound(self, queue: Sequence[int], alpha: float,
+                            period: Optional[float] = None
+                            ) -> Tuple[Schedule, float]:
+        """Schedule at ``alpha`` and return ``(schedule, bound)`` where the
+        decision trace — hence the schedule — is provably unchanged for
+        every ``alpha' in [alpha, bound)``."""
+        return self._run(queue, alpha, period, want_bound=True)
+
+    # ------------------------------------------------------------------
+    def _run(self, queue: Sequence[int], alpha: float,
+             period: Optional[float], want_bound: bool
+             ) -> Tuple[Schedule, float]:
+        g, tg = self.g, self.tg
+        P = self.P
+        comp = self._comp
+        ldet = self._ldet
+        tpl_table = self._tpl
+        routes = self._routes
+        msg_plans = self._msg_plans
+        preds_of = self._preds
+        is_exit = self._is_exit
+        names = self._link_names
+        mode = self._ctml_mode
+        quant_round = mode == "round"
+        quant_ceil = mode == "ceil"
+        if period is None:
+            period = self.default_period
+
+        link_free = [0.0] * self._n_links
+        proc_free = [0.0] * P
+        proc_of = [-1] * self.n
+        ast = [0.0] * self.n
+        aft = [0.0] * self.n
+        loads = [0.0] * P
+        scheduled = [False] * self.n
+        messages: Dict[Tuple[int, int], MessagePlacement] = {}
+        bound = _INF
+        cand_A = [0.0] * P
+        cand_B = [0.0] * P
+
+        for j in queue:
+            preds = preds_of[j]
+            for i in preds:
+                if not scheduled[i]:
+                    raise SchedulingFailure(
+                        f"task {j} dequeued before predecessor {i} (Sec. 3.2)")
+            order = sorted(preds, key=lambda i: (aft[i], i))
+            comp_j = comp[j]
+            ldet_j = ldet[j]
+            exit_j = is_exit[j]
+            track = want_bound and not exit_j
+            best_value = best_eft = 0.0
+            best_est = 0.0
+            best_p = -1
+            best_msgs: List[Tuple[int, Tuple[str, ...],
+                                  List[Tuple[int, float, float]]]] = []
+
+            for p in range(P):
+                arrival = 0.0
+                msgs: List[Tuple[int, Tuple[str, ...],
+                                 List[Tuple[int, float, float]]]] = []
+                touched: List[Tuple[int, float]] = []
+                for i in order:
+                    src = proc_of[i]
+                    if src == p:
+                        if aft[i] > arrival:
+                            arrival = aft[i]
+                        continue
+                    aft_i = aft[i]
+                    plans = msg_plans.get((i, j, src, p))
+                    if plans is None:
+                        tpl = tpl_table[(i, j)][src]
+                        plans = []
+                        for (lids, spds, robj) in routes[(src, p)]:
+                            cts = []
+                            for sp in spds:
+                                t = tpl / sp                     # Eq. 15
+                                if quant_round:
+                                    t = float(round(t))
+                                elif quant_ceil:
+                                    t = float(np.ceil(t))
+                                cts.append(t)
+                            plans.append((lids, tuple(cts), robj))
+                        msg_plans[(i, j, src, p)] = plans
+                    # --- best route src -> p (Eqs. 13-15) ---
+                    bk0, bk1, bk2 = _INF, 0, 0
+                    best_iv: Optional[List[Tuple[int, float, float]]] = None
+                    best_route: Tuple[str, ...] = ()
+                    for ridx, (lids, cts, robj) in enumerate(plans):
+                        iv: List[Tuple[int, float, float]] = []
+                        first = True
+                        lst = 0.0
+                        lft = 0.0
+                        for h in range(len(lids)):
+                            lid = lids[h]
+                            avail = link_free[lid]
+                            if first:
+                                lst = aft_i if aft_i > avail else avail
+                                first = False
+                            else:
+                                lst = lst if lst > avail else avail
+                            x = lst + cts[h]
+                            lft = lft if lft > x else x          # Eq. 14
+                            iv.append((lid, lst, lft))
+                        nh = len(lids)
+                        if lft < bk0 or (lft == bk0 and
+                                         (nh < bk1 or (nh == bk1 and
+                                                       ridx < bk2))):
+                            bk0, bk1, bk2 = lft, nh, ridx
+                            best_iv = iv
+                            best_route = robj
+                    assert best_iv is not None
+                    for (lid, _s, f) in best_iv:
+                        old = link_free[lid]
+                        touched.append((lid, old))
+                        if f > old:
+                            link_free[lid] = f
+                    msgs.append((i, best_route, best_iv))
+                    if bk0 > arrival:
+                        arrival = bk0
+                pf = proc_free[p]
+                est = pf if pf > arrival else arrival            # Eqs. 10-11
+                eft = est + comp_j[p]                            # Eq. 12
+                if exit_j:
+                    value = eft                                  # Def. 4.2
+                else:
+                    bp = 1.0 + (loads[p] / period) * alpha       # Def. 4.1
+                    value = eft * ldet_j[p] * bp
+                for lid, old in reversed(touched):
+                    link_free[lid] = old
+                if track:
+                    a_p = eft * ldet_j[p]
+                    cand_A[p] = a_p
+                    cand_B[p] = a_p * (loads[p] / period)
+                if best_p < 0 or value < best_value or \
+                        (value == best_value and eft < best_eft):
+                    # strict lexicographic (value, eft, proc): p ascends,
+                    # so an exact (value, eft) tie keeps the earlier proc
+                    best_value, best_eft, best_est = value, eft, est
+                    best_p, best_msgs = p, msgs
+
+            p = best_p
+            proc_of[j] = p
+            ast[j] = best_est
+            aft[j] = best_eft
+            proc_free[p] = best_eft
+            loads[p] += comp_j[p]
+            for (i, route, iv) in best_msgs:
+                messages[(i, j)] = MessagePlacement(
+                    (i, j), proc_of[i], p, route,
+                    [(names[lid], s_, f) for (lid, s_, f) in iv])
+                for (lid, _s, f) in iv:
+                    if f > link_free[lid]:
+                        link_free[lid] = f
+            scheduled[j] = True
+            if track:
+                a_c, b_c = cand_A[p], cand_B[p]
+                for r in range(P):
+                    if r == p:
+                        continue
+                    d_b = b_c - cand_B[r]
+                    d_a = cand_A[r] - a_c
+                    scale = abs(a_c) + abs(cand_A[r]) + 1.0
+                    if d_b > 1e-15 * scale:
+                        a_star = d_a / d_b
+                        if a_star < bound:
+                            bound = a_star
+                    elif abs(d_b) <= 1e-15 * scale and \
+                            abs(d_a) <= 1e-12 * scale:
+                        # numerically indistinguishable rival: prediction
+                        # is unreliable, force re-simulation next step
+                        if alpha < bound:
+                            bound = alpha
+
+        return Schedule(g, tg, np.array(proc_of), np.array(ast),
+                        np.array(aft), messages, alpha=alpha), bound

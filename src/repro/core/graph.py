@@ -55,6 +55,7 @@ class SPG:
             self.pred[j].append(i)
         self._topo = self._toposort()
         self.depth = self._depths()
+        self._comp_cache: Dict[bytes, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     def _toposort(self) -> List[int]:
@@ -109,6 +110,30 @@ class SPG:
         if self.comp_matrix is not None:
             return float(self.comp_matrix[i, pu])
         return float(self.weights[i]) / float(rates[pu])
+
+    def comp_matrix_for(self, rates: Sequence[float]) -> np.ndarray:
+        """Cached ``(n, P)`` computation-time matrix for a rate vector.
+
+        Entry ``[i, p]`` is bit-identical to ``comp(i, p, rates)`` — the
+        compiled engine and the vectorized rank computation index this array
+        instead of calling :meth:`comp` per scalar.
+        """
+        rates_arr = np.asarray(rates, dtype=float)
+        # with an explicit matrix the rates are ignored (Eq. 1 override)
+        key = b"" if self.comp_matrix is not None else rates_arr.tobytes()
+        cached = self._comp_cache.get(key)
+        if cached is None:
+            if len(self._comp_cache) >= 8:
+                # replan loops feed continuously drifting measured rates;
+                # rebuilding is cheap, so cap the cache instead of leaking
+                self._comp_cache.clear()
+            if self.comp_matrix is not None:
+                cached = np.asarray(self.comp_matrix, dtype=float).copy()
+            else:
+                cached = self.weights[:, None] / rates_arr[None, :]
+            cached.setflags(write=False)
+            self._comp_cache[key] = cached
+        return cached
 
     def comm_volume(self, i: int, j: int, comp_src: float) -> float:
         """Communication volume ``tpl(e_ij)``.

@@ -5,14 +5,20 @@ Equivalent to HVLB_CC with alpha = 0 (BP == 1).
 """
 from __future__ import annotations
 
+from .engine import CompiledInstance
 from .graph import SPG
 from .ranks import hprv_a, hrank, priority_queue, rank_matrix
 from .scheduler import Schedule, list_schedule
 from .topology import Topology
 
 
-def schedule_hsv_cc(g: SPG, tg: Topology) -> Schedule:
+def schedule_hsv_cc(g: SPG, tg: Topology,
+                    engine: str = "compiled") -> Schedule:
     rank = rank_matrix(g, tg)
     h = rank.mean(axis=1)
     queue = priority_queue(hprv_a(g, tg, rank), h)
-    return list_schedule(g, tg, queue, rank, alpha=0.0)
+    if engine == "reference":
+        return list_schedule(g, tg, queue, rank, alpha=0.0)
+    if engine != "compiled":
+        raise ValueError(f"unknown engine {engine!r}")
+    return CompiledInstance(g, tg, rank=rank).schedule(queue, alpha=0.0)

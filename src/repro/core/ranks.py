@@ -6,7 +6,7 @@ what makes the priorities accurate on heterogeneous networks.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 
@@ -14,11 +14,9 @@ from .graph import SPG
 from .topology import Topology
 
 
-def rank_matrix(g: SPG, tg: Topology) -> np.ndarray:
-    """``rank(n_i, p_src)`` for every task/processor pair (Eq. 2).
-
-    Returns an (n_tasks, n_procs) array.
-    """
+def rank_matrix_reference(g: SPG, tg: Topology) -> np.ndarray:
+    """Scalar-loop reference for :func:`rank_matrix` (kept for the
+    engine-equivalence tests; bit-identical to the vectorized path)."""
     P = tg.n_procs
     rank = np.zeros((g.n, P))
     speeds = np.array([tg.proc_speed(p) for p in range(P)])
@@ -34,6 +32,63 @@ def rank_matrix(g: SPG, tg: Topology) -> np.ndarray:
                 comm = tpl / speeds[p]           # Eq. 6
                 best = max(best, rank[v, p] + comm)
             rank[u, p] = c + best
+    return rank
+
+
+def rank_matrix(g: SPG, tg: Topology) -> np.ndarray:
+    """``rank(n_i, p_src)`` for every task/processor pair (Eq. 2).
+
+    Returns an (n_tasks, n_procs) array.  Computed as a level sweep: nodes
+    are grouped by height (longest path to an exit) and each level's ranks
+    come from one batched gather + masked max over the padded successor
+    table.  Every elementwise op (tpl scaling, the Eq. 6 division, the
+    final max/add) matches the scalar reference op-for-op, so the result
+    is bit-identical to :func:`rank_matrix_reference`.
+    """
+    P = tg.n_procs
+    n = g.n
+    comp = g.comp_matrix_for(tg.rates)
+    speeds = np.array([tg.proc_speed(p) for p in range(P)])
+    rank = np.zeros((n, P))
+
+    # height = longest path to an exit; nodes at the same height have all
+    # successors strictly below, so a level can be computed in one batch.
+    height = np.zeros(n, dtype=int)
+    for u in reversed(g.topo_order):
+        for v in g.succ[u]:
+            if height[v] + 1 > height[u]:
+                height[u] = height[v] + 1
+    levels: List[List[int]] = [[] for _ in range(int(height.max()) + 1)]
+    for u in range(n):
+        levels[height[u]].append(u)
+
+    exits = np.array(levels[0], dtype=int)
+    rank[exits] = comp[exits]
+    ccr = g.tpl_proportional_ccr
+    for lvl in levels[1:]:
+        nodes = np.array(lvl, dtype=int)
+        m = max(len(g.succ[u]) for u in lvl)
+        succ_pad = np.zeros((len(lvl), m), dtype=int)
+        mask = np.zeros((len(lvl), m), dtype=bool)
+        for r_, u in enumerate(lvl):
+            su = g.succ[u]
+            succ_pad[r_, :len(su)] = su
+            mask[r_, :len(su)] = True
+        gathered = rank[succ_pad]                        # (k, m, P)
+        if ccr is not None:
+            # tpl(e_uv | p) = CCR * comp(u, p): same for every successor
+            comm = (ccr * comp[nodes]) / speeds          # (k, P), Eq. 6
+            contrib = gathered + comm[:, None, :]
+        else:
+            tpl_pad = np.zeros((len(lvl), m))
+            for r_, u in enumerate(lvl):
+                for c_, v in enumerate(g.succ[u]):
+                    tpl_pad[r_, c_] = g.tpl[(u, v)]
+            comm = tpl_pad[:, :, None] / speeds[None, None, :]
+            contrib = gathered + comm
+        contrib = np.where(mask[:, :, None], contrib, -np.inf)
+        best = np.maximum(contrib.max(axis=1), 0.0)      # reference init 0.0
+        rank[nodes] = comp[nodes] + best
     return rank
 
 
@@ -87,13 +142,9 @@ def hprv_b(g: SPG, tg: Topology, rank: np.ndarray | None = None,
 def ldet_cc(g: SPG, tg: Topology, rank: np.ndarray | None = None) -> np.ndarray:
     """Longest-distance exit time (Eq. 16): ``rank - comp``; 1.0 for exits."""
     rank = rank_matrix(g, tg) if rank is None else rank
-    P = tg.n_procs
-    out = np.empty((g.n, P))
-    for i in range(g.n):
-        for p in range(P):
-            out[i, p] = rank[i, p] - g.comp(i, p, tg.rates)
-        if not g.succ[i]:
-            out[i, :] = 1.0
+    out = rank - g.comp_matrix_for(tg.rates)
+    exits = [i for i in range(g.n) if not g.succ[i]]
+    out[exits] = 1.0
     return out
 
 

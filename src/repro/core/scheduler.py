@@ -185,16 +185,23 @@ def _evaluate(g: SPG, tg: Topology, j: int, p: int, rank: np.ndarray,
 def list_schedule(g: SPG, tg: Topology, queue: Sequence[int],
                   rank: np.ndarray, alpha: float = 0.0,
                   period: Optional[float] = None,
-                  bp_on_exit: bool = True) -> Schedule:
+                  bp_on_exit: bool = True,
+                  ldet: Optional[np.ndarray] = None) -> Schedule:
     """Run the processor-selection phase for a given priority queue.
 
     ``alpha == 0`` makes BP == 1 everywhere and the algorithm *is* HSV_CC.
     ``period`` defaults to the sum of min computation times of the graph
     (the DAG's deadline proxy; Definition 4.1 normalizes processor load by
-    the application period).
+    the application period).  ``ldet`` may be passed in to share the Eq. 16
+    matrix across repeated calls (the alpha sweep); it defaults to
+    ``ldet_cc(g, tg, rank)``.
+
+    This is the readable reference implementation; the compiled engine in
+    :mod:`repro.core.engine` reproduces it bit-for-bit on flat arrays.
     """
     P = tg.n_procs
-    ldet = ldet_cc(g, tg, rank)
+    if ldet is None:
+        ldet = ldet_cc(g, tg, rank)
     if period is None:
         period = float(sum(min(g.comp(i, p, tg.rates) for p in range(P))
                            for i in range(g.n)))

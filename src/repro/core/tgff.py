@@ -68,11 +68,24 @@ def _try_random(n, rng, max_in, max_out, min_entries, min_exits):
         if levels[i] < levels.max() and outd[i] == 0:
             cands = [j for j in order
                      if levels[j] > levels[i] and ind[j] < max_in]
-            if not cands:
+            if cands:
+                j = int(rng.choice(cands))
+                edges.append((int(i), j))
+                ind[j] += 1
+                outd[i] += 1
+                continue
+            # Every later node is at full in-degree (common once n is in
+            # the hundreds: earlier repairs saturate the scarce top
+            # levels).  Steal an in-slot from a predecessor that can spare
+            # an out-edge — every degree cap is preserved.
+            swaps = [(ii, j) for (ii, j) in edges
+                     if levels[j] > levels[i] and outd[ii] > 1]
+            if not swaps:
                 return None
-            j = int(rng.choice(cands))
-            edges.append((int(i), j))
-            ind[j] += 1
+            ii, j = swaps[int(rng.integers(len(swaps)))]
+            edges.remove((ii, j))
+            outd[ii] -= 1
+            edges.append((int(i), int(j)))
             outd[i] += 1
     return edges, True
 

@@ -36,6 +36,21 @@ class Topology:
         for (a, b), rr in list(self.routes.items()):
             if (b, a) not in self.routes:
                 self.routes[(b, a)] = [tuple(reversed(r)) for r in rr]
+        # Derived quantities are pure functions of the (frozen-by-convention)
+        # link/route tables, so compute them once instead of re-running
+        # np.mean over every route on every call.
+        self._all_links: List[str] = sorted(self.link_speed)
+        self._link_index: Dict[str, int] = {
+            l: k for k, l in enumerate(self._all_links)}
+        self._route_speed: Dict[Tuple[int, int], float] = {
+            pair: float(np.mean([self.route_min_speed(r) for r in rr]))
+            for pair, rr in self.routes.items()}
+        self._proc_speed: Dict[int, float] = {}
+        for src in range(self.n_procs):
+            others = [d for d in range(self.n_procs) if d != src]
+            if all((src, d) in self._route_speed for d in others):
+                self._proc_speed[src] = float(np.mean(
+                    [self._route_speed[(src, d)] for d in others]))
 
     # ------------------------------------------------------------------
     def ctml(self, tpl: float, link: str) -> float:
@@ -53,16 +68,26 @@ class Topology:
 
     def route_speed(self, src: int, dst: int) -> float:
         """Average of per-route min speeds between src and dst (Eqs. 3-4)."""
+        cached = self._route_speed.get((src, dst))
+        if cached is not None:
+            return cached
         rr = self.routes[(src, dst)]
         return float(np.mean([self.route_min_speed(r) for r in rr]))
 
     def proc_speed(self, src: int) -> float:
         """Data-transfer speed of a source processor (Eq. 5)."""
+        cached = self._proc_speed.get(src)
+        if cached is not None:
+            return cached
         others = [d for d in range(self.n_procs) if d != src]
         return float(np.mean([self.route_speed(src, d) for d in others]))
 
     def all_links(self) -> List[str]:
-        return sorted(self.link_speed)
+        return list(self._all_links)
+
+    def link_index(self) -> Dict[str, int]:
+        """Stable link-name -> integer-id interning (sorted-name order)."""
+        return dict(self._link_index)
 
 
 def paper_topology(rates: Sequence[float] = (0.67, 1.0, 0.83),

@@ -23,16 +23,23 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, found {len(devs)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
             f"(see launch/dryrun.py)")
-    import jax.sharding as shd
     return jax.make_mesh(shape, axes, devices=devs[:n],
-                         axis_types=(shd.AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (1, 1) on one CPU)."""
     import jax
-    import jax.sharding as shd
     n = int(np.prod(shape))
     return jax.make_mesh(tuple(shape), tuple(axes),
                          devices=jax.devices()[:n],
-                         axis_types=(shd.AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only exists on jax >= 0.5; older versions default to
+    Auto semantics anyway."""
+    import jax.sharding as shd
+    if hasattr(shd, "AxisType"):
+        return {"axis_types": (shd.AxisType.Auto,) * n_axes}
+    return {}

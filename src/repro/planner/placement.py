@@ -79,15 +79,16 @@ class PlacementPlan:
 
 
 def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
-                   alpha_max: float = 3.0) -> PlacementPlan:
+                   alpha_max: float = 3.0,
+                   engine: str = "compiled") -> PlacementPlan:
     if algorithm == "hsv":
-        s = schedule_hsv_cc(g, tg)
+        s = schedule_hsv_cc(g, tg, engine=engine)
     elif algorithm == "hvlb_a":
         s = schedule_hvlb_cc(g, tg, variant="A", alpha_max=alpha_max,
-                             alpha_step=0.05).best
+                             alpha_step=0.05, engine=engine).best
     elif algorithm == "hvlb_b":
         s = schedule_hvlb_cc(g, tg, variant="B", alpha_max=alpha_max,
-                             alpha_step=0.05).best
+                             alpha_step=0.05, engine=engine).best
     else:
         raise ValueError(algorithm)
     return PlacementPlan(
@@ -97,11 +98,12 @@ def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
 
 
 def replan(g: SPG, tg: Topology, measured_rates: Sequence[float],
-           algorithm: str = "hvlb_b") -> PlacementPlan:
+           algorithm: str = "hvlb_b",
+           engine: str = "compiled") -> PlacementPlan:
     """Straggler mitigation: re-run the static scheduler with observed
     slice rates (the paper's time-predictable alternative to dynamic
     work stealing)."""
     tg2 = Topology(tg.proc_names, np.asarray(measured_rates, float),
                    dict(tg.link_speed), dict(tg.routes),
                    ctml_mode=tg.ctml_mode)
-    return plan_placement(g, tg2, algorithm)
+    return plan_placement(g, tg2, algorithm, engine=engine)

@@ -1,0 +1,148 @@
+"""Compiled engine == reference scheduler, bit for bit.
+
+The engine (repro.core.engine.CompiledInstance) must reproduce the readable
+``list_schedule`` exactly — same processor assignments, same start/finish
+floats, same message routes and per-link intervals — on the paper's worked
+example and on hundreds of random TGFF graphs across CCR regimes, rate
+patterns, and both out-degree-constraint settings.  No tolerance: the
+engine performs the same IEEE operations in the same order.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CompiledInstance, paper_spg, paper_topology,
+                        random_spg, schedule_hsv_cc, schedule_hvlb_cc)
+from repro.core.ranks import (hprv_b, ldet_cc, priority_queue,
+                              rank_matrix, rank_matrix_reference)
+from repro.core.scheduler import Schedule, list_schedule
+from repro.core.topology import fully_switched_topology
+
+RATE_PATTERNS = [(1.0, 0.67, 0.83), (0.83, 0.67, 1.0), (0.67, 0.83, 1.0)]
+
+
+def assert_identical(a: Schedule, b: Schedule) -> None:
+    assert np.array_equal(a.proc, b.proc)
+    assert np.array_equal(a.start, b.start)        # exact, no tolerance
+    assert np.array_equal(a.finish, b.finish)
+    assert set(a.messages) == set(b.messages)
+    for e, ma in a.messages.items():
+        mb = b.messages[e]
+        assert ma.route == mb.route
+        assert ma.intervals == mb.intervals        # exact floats
+        assert (ma.src_proc, ma.dst_proc) == (mb.src_proc, mb.dst_proc)
+
+
+def _case(seed: int):
+    """Deterministic mixed-config case generator (~equal coverage of both
+    outdeg settings, three CCRs, three rate patterns)."""
+    rng = np.random.default_rng(seed)
+    rates = RATE_PATTERNS[seed % 3]
+    tg = paper_topology(rates=rates)
+    ccr = [0.1, 1.0, 10.0][(seed // 3) % 3]
+    constrained = (seed // 9) % 2 == 0
+    n = int(rng.integers(8, 31))
+    g = random_spg(n, rng, ccr=ccr, tg=tg, outdeg_constraint=constrained)
+    return g, tg
+
+
+# ---------------------------------------------------------------- paper
+def test_paper_example_hsv_identical():
+    g, tg = paper_spg(), paper_topology()
+    assert_identical(schedule_hsv_cc(g, tg, engine="reference"),
+                     schedule_hsv_cc(g, tg, engine="compiled"))
+
+
+@pytest.mark.parametrize("variant", ["A", "B"])
+def test_paper_example_sweep_identical(variant):
+    g, tg = paper_spg(), paper_topology()
+    ref = schedule_hvlb_cc(g, tg, variant=variant, alpha_max=3.0,
+                           period=150.0, engine="reference")
+    eng = schedule_hvlb_cc(g, tg, variant=variant, alpha_max=3.0,
+                           period=150.0, engine="compiled")
+    assert ref.curve == eng.curve                  # every grid point exact
+    assert ref.best_alpha == eng.best_alpha
+    assert_identical(ref.best, eng.best)
+
+
+def test_rank_matrix_vectorized_bit_identical_paper():
+    g, tg = paper_spg(), paper_topology()
+    assert np.array_equal(rank_matrix(g, tg), rank_matrix_reference(g, tg))
+
+
+# ------------------------------------------------------------- random
+@pytest.mark.parametrize("seed", range(200))
+def test_engine_equivalence_random(seed):
+    """Bit-identical schedules on 200 random TGFF graphs; every engine
+    output also passes Schedule.validate()."""
+    g, tg = _case(seed)
+    r = rank_matrix(g, tg)
+    assert np.array_equal(r, rank_matrix_reference(g, tg))
+    # HPRV_B (indicator) orders any DAG, constrained or not
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    inst = CompiledInstance(g, tg, rank=r)
+    ldet = ldet_cc(g, tg, r)
+    for alpha in (0.0, 0.85):
+        ref = list_schedule(g, tg, q, r, alpha=alpha, ldet=ldet)
+        eng = inst.schedule(q, alpha=alpha)
+        assert_identical(ref, eng)
+        eng.validate()
+
+
+@pytest.mark.parametrize("seed", range(0, 200, 7))
+def test_sweep_equivalence_random(seed):
+    """The trace-interval-skipping sweep matches the step-by-step reference
+    sweep: same curve floats, same best alpha, same best schedule."""
+    g, tg = _case(seed)
+    ref = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
+                           alpha_step=0.25, engine="reference")
+    eng = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
+                           alpha_step=0.25, engine="compiled")
+    assert ref.curve == eng.curve
+    assert ref.best_alpha == eng.best_alpha
+    assert_identical(ref.best, eng.best)
+    eng.best.validate()
+
+
+@pytest.mark.parametrize("seed", [2, 11, 23])
+def test_engine_equivalence_wide_topology(seed):
+    """Equivalence holds beyond the paper's 3-processor star (P=8)."""
+    rng = np.random.default_rng(seed)
+    tg = fully_switched_topology(
+        8, rates=rng.uniform(0.6, 1.2, size=8),
+        link_speeds=rng.uniform(0.5, 3.0, size=8))
+    g = random_spg(24, rng, ccr=1.0, tg=tg)
+    r = rank_matrix(g, tg)
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    inst = CompiledInstance(g, tg, rank=r)
+    for alpha in (0.0, 1.2):
+        ref = list_schedule(g, tg, q, r, alpha=alpha)
+        eng = inst.schedule(q, alpha=alpha)
+        assert_identical(ref, eng)
+        eng.validate()
+
+
+def test_hsv_engine_equivalence_constrained():
+    """HSV_CC (HPRV_A queue) equivalence on the constrained family."""
+    for seed in range(0, 40):
+        rng = np.random.default_rng(10_000 + seed)
+        tg = paper_topology(rates=RATE_PATTERNS[seed % 3])
+        g = random_spg(int(rng.integers(8, 26)), rng, ccr=1.0, tg=tg,
+                       outdeg_constraint=True)
+        ref = schedule_hsv_cc(g, tg, engine="reference")
+        eng = schedule_hsv_cc(g, tg, engine="compiled")
+        assert_identical(ref, eng)
+        eng.validate()
+
+
+def test_adaptive_sweep_never_worse_than_coarse_and_valid():
+    """Opt-in coarse-to-fine sweep: valid schedule, best from the curve,
+    and at least as good as its own coarse grid by construction."""
+    rng = np.random.default_rng(7)
+    tg = paper_topology()
+    g = random_spg(20, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
+                           alpha_step=0.05, sweep="adaptive")
+    res.best.validate()
+    assert res.best.makespan == pytest.approx(
+        min(m for _, m in res.curve))
+    assert any(a == pytest.approx(res.best_alpha) for a, _ in res.curve)
