@@ -1,0 +1,78 @@
+"""Compare a fresh benchmark snapshot against the committed baseline.
+
+  python benchmarks/check_regression.py BASELINE FRESH \\
+      --row exp7.P8.n500.schedule_us [--row ...] [--max-regress 0.20] \\
+      [--min-derived exp7.P8.n100.ref_schedule_us:2.0 ...]
+
+Exits non-zero (for CI) if any watched row's ``us_per_call`` regressed by
+more than ``--max-regress`` (fraction) relative to the baseline.  Rows
+missing from either snapshot fail too — a silently dropped watchdog row
+is itself a regression.
+
+``--row`` compares absolute microseconds across snapshots, which only
+makes sense on comparable hardware; ``--min-derived`` gates a row's
+``derived`` value of the *fresh* snapshot alone (e.g. the exp7
+``ref_schedule_us`` rows, whose derived field is the same-machine
+engine-vs-reference speedup), so it stays meaningful on CI runners whose
+absolute speed differs from the machine that recorded the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        snap = json.load(f)
+    return {r["name"]: (float(r["us_per_call"]), r["derived"])
+            for r in snap["rows"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed snapshot (BENCH_sched.json)")
+    ap.add_argument("fresh", help="freshly produced snapshot")
+    ap.add_argument("--row", action="append", default=[],
+                    metavar="NAME", help="row name to watch (repeatable)")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="max tolerated fractional latency increase")
+    ap.add_argument("--min-derived", action="append", default=[],
+                    metavar="NAME:VALUE",
+                    help="fail if the fresh row's derived value is below "
+                         "VALUE (machine-independent gate, repeatable)")
+    args = ap.parse_args()
+    if not args.row and not args.min_derived:
+        ap.error("nothing to check: pass --row and/or --min-derived")
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    failed = False
+    for name in args.row:
+        if name not in base or name not in fresh:
+            missing = "baseline" if name not in base else "fresh"
+            print(f"FAIL {name}: missing from {missing} snapshot")
+            failed = True
+            continue
+        ratio = fresh[name][0] / base[name][0]
+        status = "FAIL" if ratio > 1.0 + args.max_regress else "ok"
+        print(f"{status} {name}: {base[name][0]:.1f}us -> "
+              f"{fresh[name][0]:.1f}us "
+              f"({ratio:.2f}x, limit {1.0 + args.max_regress:.2f}x)")
+        failed |= status == "FAIL"
+    for spec in args.min_derived:
+        name, _, floor = spec.rpartition(":")
+        if name not in fresh:
+            print(f"FAIL {name}: missing from fresh snapshot")
+            failed = True
+            continue
+        value = float(fresh[name][1])
+        status = "FAIL" if value < float(floor) else "ok"
+        print(f"{status} {name}: derived {value:.2f} (floor {floor})")
+        failed |= status == "FAIL"
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

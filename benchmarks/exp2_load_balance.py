@@ -9,8 +9,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (load_balance, paper_topology, random_spg,
-                        schedule_hsv_cc, schedule_hvlb_cc)
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, Scheduler,
+                        load_balance, paper_topology, random_spg)
 
 from .common import RATE_PATTERNS, row, timed
 
@@ -29,13 +29,20 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
             for _ in range(n_graphs):
                 g = random_spg(n, rng, ccr=1.0, tg=tg,
                                outdeg_constraint=True)
-                s, us = timed(schedule_hsv_cc, g, tg, engine=engine)
-                lbs["hsv"].append(load_balance(s)); us_tot["hsv"] += us
-                for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
-                    res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
-                                    alpha_max=alpha_max, alpha_step=0.05,
-                                    engine=engine)
-                    lbs[key].append(load_balance(res.best))
+                # fresh session per timed row: per-call semantics, rows
+                # stay comparable with earlier BENCH snapshots
+                plan, us = timed(lambda: Scheduler(
+                    tg, engine=engine).submit(g, HSV_CC()))
+                lbs["hsv"].append(load_balance(plan.schedule))
+                us_tot["hsv"] += us
+                for policy, key in (
+                        (HVLB_CC_A(alpha_max=alpha_max, alpha_step=0.05),
+                         "hvlbA"),
+                        (HVLB_CC_B(alpha_max=alpha_max, alpha_step=0.05),
+                         "hvlbB")):
+                    plan, us = timed(lambda p=policy: Scheduler(
+                        tg, engine=engine).submit(g, p))
+                    lbs[key].append(load_balance(plan.schedule))
                     us_tot[key] += us
             for key, vals in lbs.items():
                 rows.append(row(f"exp2.{tag}.n{n}.{key}.lb_mean",

@@ -6,8 +6,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (paper_topology, random_spg, schedule_hsv_cc,
-                        schedule_hvlb_cc, slr)
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, Scheduler,
+                        paper_topology, random_spg, slr)
 
 from .common import row, timed
 
@@ -23,13 +23,19 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
         us_tot = {k: 0.0 for k in slrs}
         for _ in range(n_graphs):
             g = random_spg(20, rng, ccr=ccr, tg=tg, outdeg_constraint=True)
-            s, us = timed(schedule_hsv_cc, g, tg, engine=engine)
-            slrs["hsv"].append(slr(s)); us_tot["hsv"] += us
-            for variant, key in (("A", "hvlbA"), ("B", "hvlbB")):
-                res, us = timed(schedule_hvlb_cc, g, tg, variant=variant,
-                                alpha_max=alpha_max, alpha_step=0.05,
-                                engine=engine)
-                slrs[key].append(slr(res.best)); us_tot[key] += us
+            # fresh session per timed row: per-call semantics, rows stay
+            # comparable with earlier BENCH snapshots
+            plan, us = timed(lambda: Scheduler(
+                tg, engine=engine).submit(g, HSV_CC()))
+            slrs["hsv"].append(slr(plan.schedule)); us_tot["hsv"] += us
+            for policy, key in (
+                    (HVLB_CC_A(alpha_max=alpha_max, alpha_step=0.05),
+                     "hvlbA"),
+                    (HVLB_CC_B(alpha_max=alpha_max, alpha_step=0.05),
+                     "hvlbB")):
+                plan, us = timed(lambda p=policy: Scheduler(
+                    tg, engine=engine).submit(g, p))
+                slrs[key].append(slr(plan.schedule)); us_tot[key] += us
         for key, vals in slrs.items():
             us = us_tot[key] / n_graphs
             rows.append(row(f"exp3.ccr{ccr:g}.{key}.slr_mean", us,

@@ -10,8 +10,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (PAPER_COMP_EXP5, paper_spg, paper_topology,
-                        precision_curve, schedule_holes, schedule_hvlb_cc)
+from repro.core import (HVLB_CC_IC, PAPER_COMP_EXP5, Scheduler, paper_spg,
+                        paper_topology, precision_curve)
 
 from .common import row, timed
 
@@ -20,10 +20,11 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rows: List[str] = []
     g = paper_spg(comp=PAPER_COMP_EXP5)
     tg = paper_topology()
-    res, us = timed(schedule_hvlb_cc, g, tg, variant="B", alpha_max=3.0,
-                    period=150.0, engine=engine)
-    s = res.best
-    holes = schedule_holes(s)
+    sched = Scheduler(tg, policy=HVLB_CC_IC(alpha_max=3.0, period=150.0),
+                      engine=engine)
+    plan, us = timed(sched.submit, g)          # holes ride on the plan
+    s = plan.schedule
+    holes = {t: h for t, h in plan.holes.items() if np.isfinite(h)}
     rows.append(row("exp5.makespan", us, s.makespan))
     for t, h in sorted(holes.items()):
         rows.append(row(f"exp5.hole.n{t+1}", us, h))

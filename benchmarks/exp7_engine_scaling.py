@@ -20,8 +20,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (CompiledInstance, fully_switched_topology,
-                        paper_topology, random_spg, schedule_hvlb_cc)
+from repro.core import (CompiledInstance, HVLB_CC_B, Scheduler,
+                        fully_switched_topology, paper_topology, random_spg)
 from repro.core.ranks import hprv_b, priority_queue, rank_matrix
 from repro.core.scheduler import list_schedule
 
@@ -56,13 +56,17 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
             q = priority_queue(hprv_b(g, tg, r), r.mean(1))
             inst, compile_us = timed(CompiledInstance, g, tg, rank=r)
 
-            t0 = time.perf_counter()
+            # min over repeats: the robust latency estimator (shared-CI
+            # runners make a mean-of-3 too noisy for the regression gate)
+            sched_us = float("inf")
             for _ in range(repeats):
+                t0 = time.perf_counter()
                 if compiled:
                     s = inst.schedule(q, alpha=1.0)
                 else:
                     s = list_schedule(g, tg, q, r, alpha=1.0)
-            sched_us = (time.perf_counter() - t0) / repeats * 1e6
+                sched_us = min(sched_us,
+                               (time.perf_counter() - t0) * 1e6)
             rows.append(row(f"exp7.P{P}.n{n}.compile_us", compile_us,
                             float(compile_us)))
             rows.append(row(f"exp7.P{P}.n{n}.schedule_us", sched_us,
@@ -75,10 +79,10 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
                 rows.append(row(f"exp7.P{P}.n{n}.ref_schedule_us", ref_us,
                                 ref_us / sched_us))  # engine speedup
             if n <= 200:
-                res, sweep_us = timed(
-                    schedule_hvlb_cc, g, tg, variant="B", alpha_max=5.0,
-                    alpha_step=0.05, engine=engine)
-                sim_pts = len({m for _, m in res.curve})
+                plan, sweep_us = timed(
+                    Scheduler(tg, engine=engine).submit, g,
+                    HVLB_CC_B(alpha_max=5.0, alpha_step=0.05))
+                sim_pts = len({m for _, m in plan.sweep.curve})
                 rows.append(row(f"exp7.P{P}.n{n}.sweep_us", sweep_us,
                                 float(sim_pts)))
     return rows

@@ -29,6 +29,7 @@ MODULES = [
     "exp5_imprecise",
     "exp6_tpu_placement",
     "exp7_engine_scaling",    # compiled-engine throughput scaling
+    "exp8_session_api",       # incremental update + fleet submit_many
     "roofline",               # §Roofline summary rows from the dry-run
 ]
 
@@ -38,19 +39,18 @@ def engine_speedup_probe(n_graphs: int = 3) -> dict:
     on the reference and compiled paths and assert identical results."""
     import numpy as np
 
-    from repro.core import paper_topology, random_spg, schedule_hvlb_cc
+    from repro.core import HVLB_CC_A, Scheduler, paper_topology, random_spg
 
     tg = paper_topology()
+    policy = HVLB_CC_A(alpha_max=5.0, alpha_step=0.05)
     ref_us = eng_us = 0.0
     for k in range(n_graphs):
         rng = np.random.default_rng(1050 + k)
         g = random_spg(50, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
         t0 = time.perf_counter()
-        ref = schedule_hvlb_cc(g, tg, variant="A", alpha_max=5.0,
-                               alpha_step=0.05, engine="reference")
+        ref = Scheduler(tg, policy=policy, engine="reference").submit(g).sweep
         t1 = time.perf_counter()
-        eng = schedule_hvlb_cc(g, tg, variant="A", alpha_max=5.0,
-                               alpha_step=0.05, engine="compiled")
+        eng = Scheduler(tg, policy=policy, engine="compiled").submit(g).sweep
         t2 = time.perf_counter()
         assert ref.curve == eng.curve and ref.best_alpha == eng.best_alpha
         assert np.array_equal(ref.best.finish, eng.best.finish)

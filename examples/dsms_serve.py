@@ -40,7 +40,11 @@ engine.register(Query(
     mandatory=lambda logits: jnp.mean(logits[:, -1], -1),
 ))
 
-print(f"engine: {len(engine.queries)} queries; "
+# Registration is O(1): the schedule is computed once, lazily — three
+# registrations cost one re-plan, not three.
+assert engine.replans == 0
+engine.ensure_plan()
+print(f"engine: {len(engine.queries)} queries, {engine.replans} replan; "
       f"plan makespan={engine.plan.makespan * 1e3:.3f} ms on "
       f"{engine.topology.n_procs} slices")
 print(f"holes: { {k: round(v*1e3, 3) for k, v in engine.holes.items()} } (ms)")

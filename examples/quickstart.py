@@ -1,34 +1,57 @@
-"""Quickstart: the paper's scheduler end-to-end in 40 lines.
+"""Quickstart: the paper's scheduler end-to-end through the session API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (paper_spg, paper_topology, schedule_hsv_cc,
-                        schedule_hvlb_cc, schedule_holes, slr, speedup,
-                        load_balance)
+from repro.core import (HSV_CC, HVLB_CC_B, HVLB_CC_IC, Scheduler, load_balance,
+                        paper_spg, paper_topology, slr, speedup)
 
-# 1. The paper's worked example: Fig. 3 graph on the Fig. 2 network.
+# 1. The paper's worked example: Fig. 3 graph on the Fig. 2 network,
+#    submitted to a long-lived scheduler session (register once,
+#    execute continuously — the DSMS loop).
 g = paper_spg()
 tg = paper_topology()
+sched = Scheduler(tg)                       # one session, shared compile
 
 # 2. Baseline HSV_CC (Xie et al.) — tasks pile onto the fast processors.
-hsv = schedule_hsv_cc(g, tg)
+hsv = sched.submit(g, HSV_CC()).schedule
 print(f"HSV_CC   makespan={hsv.makespan:5.1f}  SLR={slr(hsv):.2f} "
       f"speedup={speedup(hsv):.2f}  LB={load_balance(hsv):.2f}")
 for p in range(3):
     tasks = [f"n{i+1}" for i in hsv.tasks_on(p)]
     print(f"  p{p+1}: {tasks}")
 
-# 3. HVLB_CC — load-balanced, contention-aware (Algorithm 1, alpha sweep).
-res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0, period=150.0)
-best = res.best
-print(f"\nHVLB_CC(B) makespan={best.makespan:5.1f} (alpha={res.best_alpha:.2f}) "
-      f"SLR={slr(best):.2f} speedup={speedup(best):.2f} "
-      f"LB={load_balance(best):.2f}")
+# 3. HVLB_CC — load-balanced, contention-aware (Algorithm 1 alpha sweep).
+plan = sched.submit(g, HVLB_CC_B(alpha_max=3.0, period=150.0))
+best = plan.schedule
+print(f"\nHVLB_CC(B) makespan={best.makespan:5.1f} "
+      f"(alpha={plan.best_alpha:.2f}) SLR={slr(best):.2f} "
+      f"speedup={speedup(best):.2f} LB={load_balance(best):.2f}")
 for p in range(3):
     tasks = [f"n{i+1}" for i in best.tasks_on(p)]
     print(f"  p{p+1}: {tasks}")
+# the sweep curve ships as plotting-ready arrays (Fig. 5)
+print(f"sweep: {len(plan.sweep.alphas)} grid points, "
+      f"makespan range [{plan.sweep.makespans.min():.0f}, "
+      f"{plan.sweep.makespans.max():.0f}]")
 
-# 4. Schedule holes -> imprecise computation headroom (Section 4.4).
-holes = schedule_holes(best)
-print("\nschedule holes:", {f"n{k+1}": round(v, 1) for k, v in holes.items()})
+# 4. Imprecise computation as a first-class policy (Section 4.4): the
+#    plan carries its schedule holes and precision accessors directly.
+ic = sched.submit(g, HVLB_CC_IC(alpha_max=3.0, period=150.0))
+print("\nschedule holes:", {f"n{k+1}": round(v, 1)
+                            for k, v in ic.holes.items()})
+
+# 5. Online drift (Section 4.4): task n10's arrival rate drops 10%.
+#    probe_update reports how much of the memoized decision trace
+#    survives (rank recomputation only); update() then re-simulates just
+#    that suffix, bit-identical to a fresh plan.  In this 10-task example
+#    the drift reaches every ancestor rank so the whole trace re-runs —
+#    the fleet-scale win is benchmarked in benchmarks/exp8_session_api.py.
+b_policy = HVLB_CC_B(alpha_max=3.0, period=150.0)
+surviving = sched.probe_update(task_rates={9: 0.9}, policy=b_policy)
+upd = sched.update(task_rates={9: 0.9}, policy=b_policy)
+print(f"\nafter drift: makespan={upd.makespan:.1f}; probe said "
+      f"{surviving}/{g.n} decisions survive, update replayed "
+      f"{upd.replay.decisions_replayed} and re-simulated "
+      f"{upd.replay.decisions_simulated}")
+
 print("\n(paper: HSV_CC=73, HVLB_CC=62 — see tests/test_paper_example.py)")

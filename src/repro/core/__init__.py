@@ -1,10 +1,12 @@
 """Core paper algorithms: contention-aware, load-balanced static list
 scheduling for stream-processing DAGs on heterogeneous processors/networks.
 """
-from .engine import CompiledInstance
+from .api import (HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC, FleetPlan,
+                  Plan, Policy, ReplayStats, Scheduler, SweepResult)
+from .engine import CompiledInstance, DecisionTrace
 from .graph import PAPER_COMP, PAPER_COMP_EXP5, PAPER_EDGES, SPG, paper_spg
 from .hsv_cc import schedule_hsv_cc
-from .hvlb_cc import SweepResult, schedule_hvlb_cc, schedule_hvlb_cc_best
+from .hvlb_cc import schedule_hvlb_cc, schedule_hvlb_cc_best
 from .imprecise import precision, precision_curve, schedule_holes
 from .metrics import load_balance, sfr, slr, speedup
 from .ranks import hprv_a, hprv_b, hrank, ldet_cc, priority_queue, rank_matrix
@@ -14,12 +16,16 @@ from .tgff import random_spg
 from .topology import Topology, fully_switched_topology, paper_topology
 
 __all__ = [
-    "CompiledInstance",
+    # session API (the supported public surface)
+    "Scheduler", "Plan", "FleetPlan", "Policy", "ReplayStats",
+    "HSV_CC", "HVLB_CC_A", "HVLB_CC_B", "HVLB_CC_IC", "SweepResult",
+    "CompiledInstance", "DecisionTrace",
     "SPG", "paper_spg", "PAPER_EDGES", "PAPER_COMP", "PAPER_COMP_EXP5",
     "Topology", "paper_topology", "fully_switched_topology",
     "rank_matrix", "hrank", "hprv_a", "hprv_b", "ldet_cc", "priority_queue",
     "Schedule", "MessagePlacement", "SchedulingFailure", "list_schedule",
-    "schedule_hsv_cc", "schedule_hvlb_cc", "schedule_hvlb_cc_best",
-    "SweepResult", "schedule_holes", "precision", "precision_curve",
+    "schedule_holes", "precision", "precision_curve",
     "slr", "speedup", "load_balance", "sfr", "random_spg",
+    # deprecated one-shot shims
+    "schedule_hsv_cc", "schedule_hvlb_cc", "schedule_hvlb_cc_best",
 ]

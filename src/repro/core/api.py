@@ -1,0 +1,693 @@
+"""Unified scheduler session API: policies, multi-graph submission, and
+incremental rescheduling.
+
+The paper's DSMS setting is *register once, execute continuously*
+(Section 4.4): schedules are recomputed whenever queries are added or
+task computation times drift.  This module is the long-lived surface for
+that loop — a :class:`Scheduler` session bound to one
+:class:`~.topology.Topology`:
+
+  * ``submit(spg) -> Plan`` compiles and caches a
+    :class:`~.engine.CompiledInstance` per graph and runs the selected
+    :class:`Policy` (the Algorithm-1 alpha sweep for the HVLB policies).
+  * ``submit_many([spg, ...]) -> FleetPlan`` schedules several
+    independent SPGs against *shared* link state in one engine pass —
+    the exp6 fleet-serving scenario.  Internally the graphs are joined
+    into one disjoint-union SPG whose merged priority queue preserves
+    each graph's own dequeue order.
+  * ``update(task_rates=..., link_speed=...) -> Plan`` re-plans after
+    drift.  For task-rate drift it re-simulates only the *suffix* of the
+    memoized decision trace that the drift can actually reach: rows of
+    the computation/LDET matrices that changed (plus, under the
+    worked-example CCR convention, successors whose inbound message
+    volumes changed) mark the first queue position whose decision could
+    differ; everything before it is re-committed from the trace
+    checkpoint (see ``engine.DecisionTrace``).  The result is
+    bit-identical to a from-scratch ``submit`` of the modified graph.
+
+Policies are frozen dataclasses (hashable — they key the session's plan
+and trace caches): :class:`HSV_CC` (baseline, Xie et al.),
+:class:`HVLB_CC_A` / :class:`HVLB_CC_B` (Algorithm 1 with the Eq. 8 /
+Eq. 9 prioritizer), and :class:`HVLB_CC_IC` — the Section-4.4 imprecise
+computation model as a first-class policy whose :class:`Plan` carries
+schedule holes and precision accessors instead of requiring post-hoc
+helper calls.
+
+The pre-existing one-shot functions (``schedule_hsv_cc``,
+``schedule_hvlb_cc``, ``schedule_hvlb_cc_best``) remain as thin
+deprecation shims over this module with bit-identical outputs
+(``tests/test_engine_equivalence.py`` asserts shim == session ==
+reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .engine import CompiledInstance, DecisionTrace
+from .graph import SPG
+from .imprecise import precision as _precision
+from .imprecise import schedule_holes
+from .ranks import hprv_a, hprv_b, ldet_cc, priority_queue, rank_matrix
+from .scheduler import Schedule, list_schedule
+from .topology import Topology
+
+# Grid alphas closer than this to a predicted trace-flip point are
+# re-simulated rather than skipped (guards the last-ulp difference between
+# the linear prediction A + B*alpha and the simulated Def. 4.1 value).
+_SKIP_MARGIN = 1e-6
+
+
+# ----------------------------------------------------------------------
+# Policies
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HSV_CC:
+    """Baseline policy (Xie et al. [25]): HPRV_A queue, EFT * LDET_CC
+    selection — equivalent to HVLB_CC at alpha = 0, no sweep."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HVLB_CC_A:
+    """Algorithm 1 with the HSV prioritizer (Eq. 8): sweep alpha over
+    ``[0, alpha_max]`` in ``alpha_step`` increments, keep min makespan.
+
+    ``period`` is the application period of Definition 4.1 (the
+    deadline/stream-rate requirement).  ``None`` pins the DAG's
+    sum-of-min-computation proxy at first submission; the pinned value is
+    reused by every :meth:`Scheduler.update` (``Plan.period`` exposes it).
+    ``sweep="adaptive"`` is the opt-in coarse-to-fine grid.
+    """
+
+    alpha_max: float = 3.0
+    alpha_step: float = 0.01
+    period: Optional[float] = None
+    sweep: str = "grid"
+    coarse_factor: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class HVLB_CC_B(HVLB_CC_A):
+    """Algorithm 1 with the depth-damped prioritizer (Eq. 9) that orders
+    arbitrary stream-processing graphs (see ``ranks.hprv_b``)."""
+
+    depth_power: int = 2
+    outd_mode: str = "indicator"
+
+
+@dataclasses.dataclass(frozen=True)
+class HVLB_CC_IC(HVLB_CC_B):
+    """HVLB_CC (B) + the Section-4.4 imprecise-computation model: the
+    resulting :class:`Plan` carries ``holes`` (Eqs. 20-21, with exit
+    tasks that have nothing after them reported as ``inf``) and a
+    ``precision(task, lam)`` accessor (Experiment 5)."""
+
+
+Policy = Union[HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC]
+
+
+# ----------------------------------------------------------------------
+# Results
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepResult:
+    """Alpha-sweep outcome (Fig. 5 data)."""
+
+    best: Schedule
+    best_alpha: float
+    curve: List[Tuple[float, float]]     # (alpha, makespan) per grid point
+
+    @property
+    def alphas(self) -> np.ndarray:
+        """Grid alphas as a ``(k,)`` array (plotting-ready)."""
+        return np.array([a for a, _ in self.curve], dtype=float)
+
+    @property
+    def makespans(self) -> np.ndarray:
+        """Makespan per grid alpha as a ``(k,)`` array."""
+        return np.array([m for _, m in self.curve], dtype=float)
+
+
+@dataclasses.dataclass
+class ReplayStats:
+    """Decision-replay accounting for one submit/update."""
+
+    suffix_start: int            # first re-simulated queue position
+    decisions_simulated: int     # full candidate-loop evaluations
+    decisions_replayed: int      # positions re-committed from the trace
+    sims_resumed: int            # alpha points resumed from a trace
+    sims_full: int               # alpha points simulated from scratch
+
+
+@dataclasses.dataclass
+class Plan:
+    """Result of scheduling one graph under one policy."""
+
+    schedule: Schedule
+    policy: Policy
+    graph: SPG
+    period: Optional[float]      # effective (pinned) Def.-4.1 period
+    sweep: Optional[SweepResult] = None
+    holes: Optional[Dict[int, float]] = None     # HVLB_CC_IC only
+    replay: Optional[ReplayStats] = None
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule.makespan
+
+    @property
+    def proc(self) -> np.ndarray:
+        return self.schedule.proc
+
+    @property
+    def best_alpha(self) -> Optional[float]:
+        return self.sweep.best_alpha if self.sweep is not None else None
+
+    def precision(self, task: int, lam: float) -> float:
+        """Data precision of ``task`` at arrival rate ``lam`` (Exp. 5).
+
+        Requires an imprecise-computation policy (:class:`HVLB_CC_IC`),
+        which attaches the schedule holes to the plan.
+        """
+        if self.holes is None:
+            raise ValueError("precision requires an HVLB_CC_IC policy "
+                             "(this plan carries no schedule holes)")
+        s = self.schedule
+        mp = self.graph.comp(task, int(s.proc[task]), s.topology.rates)
+        return _precision(mp, self.holes.get(task, 0.0), lam, ic=True)
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    """Joint schedule of several independent SPGs on one topology.
+
+    ``schedule`` is the union schedule (tasks of graph ``k`` occupy node
+    ids ``offsets[k] .. offsets[k] + graphs[k].n``); ``subschedule(k)``
+    re-indexes graph ``k``'s slice back to its own node ids.
+    """
+
+    schedule: Schedule
+    graphs: List[SPG]
+    offsets: List[int]
+    policy: Policy
+    period: Optional[float]
+    sweep: Optional[SweepResult] = None
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule.makespan
+
+    def subschedule(self, k: int) -> Schedule:
+        g, off = self.graphs[k], self.offsets[k]
+        lo, hi = off, off + g.n
+        msgs = {(i - off, j - off): dataclasses.replace(
+                    m, edge=(i - off, j - off))
+                for (i, j), m in self.schedule.messages.items()
+                if lo <= i < hi}
+        return Schedule(g, self.schedule.topology,
+                        self.schedule.proc[lo:hi].copy(),
+                        self.schedule.start[lo:hi].copy(),
+                        self.schedule.finish[lo:hi].copy(),
+                        msgs, alpha=self.schedule.alpha)
+
+
+# ----------------------------------------------------------------------
+# Internals
+# ----------------------------------------------------------------------
+def _queue_key(policy: Policy) -> tuple:
+    if isinstance(policy, HVLB_CC_B):        # covers HVLB_CC_IC
+        return ("b", policy.depth_power, policy.outd_mode)
+    return ("a",)                            # HSV_CC and HVLB_CC_A share Eq. 8
+
+
+class _GraphSession:
+    """Cached per-graph state of one Scheduler session.
+
+    The compiled instance is built lazily: :meth:`Scheduler.probe_update`
+    only needs ranks/LDET/queues to measure how much of a memoized trace
+    a prospective drift would invalidate.
+    """
+
+    __slots__ = ("g", "handles", "rank", "ldet", "queues", "periods",
+                 "traces", "plans", "_tg", "_compiled", "_inst")
+
+    def __init__(self, g: SPG, tg: Topology, compiled: bool) -> None:
+        self.g = g
+        self.handles = [g]      # graph objects that address this session
+        self._tg = tg
+        self._compiled = compiled
+        self._inst: Optional[CompiledInstance] = None
+        self.rank = rank_matrix(g, tg)
+        self.ldet = ldet_cc(g, tg, self.rank)
+        self.queues: Dict[tuple, List[int]] = {}
+        self.periods: Dict[Policy, float] = {}
+        self.traces: Dict[Policy, Dict[float, DecisionTrace]] = {}
+        self.plans: Dict[Policy, Plan] = {}
+
+    @property
+    def inst(self) -> Optional[CompiledInstance]:
+        if self._compiled and self._inst is None:
+            self._inst = CompiledInstance(self.g, self._tg, rank=self.rank,
+                                          ldet=self.ldet)
+        return self._inst
+
+    def queue_for(self, tg: Topology, policy: Policy) -> List[int]:
+        key = _queue_key(policy)
+        q = self.queues.get(key)
+        if q is None:
+            g, rank = self.g, self.rank
+            if key[0] == "b":
+                prv = hprv_b(g, tg, rank, depth_power=policy.depth_power,
+                             outd_mode=policy.outd_mode)
+            else:
+                prv = hprv_a(g, tg, rank)
+            q = priority_queue(prv, rank.mean(axis=1))
+            self.queues[key] = q
+        return q
+
+    def default_period(self, tg: Topology) -> float:
+        return self.g.default_period(tg.rates, tg.n_procs)
+
+
+def _rescaled_graph(g: SPG, task_rates: Dict[int, float]) -> SPG:
+    """The graph after arrival-rate drift: task ``t``'s computational
+    volume scales by ``task_rates[t]`` (Eq. 19's lambda on the mandatory
+    part).  Structure, explicit edge volumes, and names are preserved."""
+    w = g.weights.copy()
+    cm = None if g.comp_matrix is None else np.array(g.comp_matrix,
+                                                     dtype=float)
+    for t, f in task_rates.items():
+        if not 0 <= t < g.n:
+            raise ValueError(f"task {t} out of range")
+        w[t] *= f
+        if cm is not None:
+            cm[t] *= f
+    g2 = SPG(n=g.n, edges=list(g.edges), weights=w, tpl=dict(g.tpl),
+             tpl_proportional_ccr=g.tpl_proportional_ccr,
+             comp_matrix=cm, name=g.name)
+    return g2
+
+
+def _disjoint_union(graphs: Sequence[SPG], tg: Topology) -> Tuple[SPG,
+                                                                  List[int]]:
+    ccrs = {g.tpl_proportional_ccr for g in graphs}
+    if len(ccrs) > 1:
+        raise ValueError("submit_many requires every graph to share the "
+                         "same tpl convention (tpl_proportional_ccr)")
+    explicit = any(g.comp_matrix is not None for g in graphs)
+    offsets: List[int] = []
+    weights: List[float] = []
+    edges: List[Tuple[int, int]] = []
+    tpl: Dict[Tuple[int, int], float] = {}
+    comp_rows: List[np.ndarray] = []
+    off = 0
+    for g in graphs:
+        offsets.append(off)
+        weights.extend(g.weights.tolist())
+        edges.extend((i + off, j + off) for (i, j) in g.edges)
+        tpl.update({(i + off, j + off): v for (i, j), v in g.tpl.items()})
+        if explicit:
+            comp_rows.append(g.comp_matrix_for(tg.rates))
+        off += g.n
+    union = SPG(n=off, edges=edges, weights=np.asarray(weights),
+                tpl=tpl, tpl_proportional_ccr=next(iter(ccrs)),
+                comp_matrix=np.vstack(comp_rows) if explicit else None,
+                name=f"fleet[{len(graphs)}]")
+    return union, offsets
+
+
+# ----------------------------------------------------------------------
+# The session
+# ----------------------------------------------------------------------
+class Scheduler:
+    """Long-lived scheduling session bound to one :class:`Topology`.
+
+    ``engine="compiled"`` (default) runs every policy on shared
+    :class:`CompiledInstance` state with decision-trace memoization;
+    ``engine="reference"`` re-runs the readable ``list_schedule`` per
+    grid point (bit-identical results, no incremental replay — updates
+    fall back to a full re-plan).
+    """
+
+    def __init__(self, topology: Topology, policy: Optional[Policy] = None,
+                 engine: str = "compiled") -> None:
+        if engine not in ("compiled", "reference"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.topology = topology
+        self.policy: Policy = HVLB_CC_B() if policy is None else policy
+        self.engine = engine
+        self._sessions: Dict[int, _GraphSession] = {}
+        self._last: Optional[_GraphSession] = None
+        # probe_update's dry-run state, reused by a matching update()
+        self._probe: Optional[tuple] = None
+
+    # ------------------------------------------------------------- submit
+    def submit(self, g: SPG, policy: Optional[Policy] = None) -> Plan:
+        """Compile (once) and schedule ``g`` under ``policy``.
+
+        Re-submitting the same graph object reuses its compiled instance,
+        priority queues, and — for an unchanged policy — the cached plan.
+        """
+        policy = self.policy if policy is None else policy
+        sess = self._sessions.get(id(g))
+        if sess is None or sess.g is not g:
+            sess = _GraphSession(g, self.topology,
+                                 compiled=self.engine == "compiled")
+            self._sessions[id(g)] = sess
+        self._last = sess
+        plan = sess.plans.get(policy)
+        if plan is None:
+            plan = self._plan(sess, policy)
+            sess.plans[policy] = plan
+        return plan
+
+    def submit_many(self, graphs: Iterable[SPG],
+                    policy: Optional[Policy] = None) -> FleetPlan:
+        """Schedule several independent SPGs against shared link state in
+        one engine pass (the exp6 fleet scenario).
+
+        The graphs are joined into one disjoint-union SPG; the merged
+        priority queue is the stable merge of the per-graph queues (the
+        global HPRV sort restricted to one graph's nodes reproduces that
+        graph's own queue), so precedence safety per graph is preserved.
+        The union session stays cached: a later ``update(task_rates=...)``
+        (keyed by union node ids) replays the fleet schedule
+        incrementally.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("submit_many needs at least one graph")
+        policy = self.policy if policy is None else policy
+        union, offsets = _disjoint_union(graphs, self.topology)
+        plan = self.submit(union, policy)
+        return FleetPlan(schedule=plan.schedule, graphs=graphs,
+                         offsets=offsets, policy=policy,
+                         period=plan.period, sweep=plan.sweep)
+
+    # ------------------------------------------------------------- update
+    def probe_update(self, *, task_rates: Dict[int, float],
+                     graph: Optional[SPG] = None,
+                     policy: Optional[Policy] = None) -> int:
+        """Dry-run of ``update(task_rates=...)``: how many leading
+        decisions of the memoized trace provably survive the drift.
+
+        Costs one vectorized rank/LDET recomputation — no scheduling.
+        ``n`` (every decision survives — the drift is invisible to this
+        policy) down to ``0`` (full re-simulation).  A matching
+        ``update()`` right after reuses the probe's prepared state, so
+        probing before updating costs nothing extra.
+        """
+        policy = self.policy if policy is None else policy
+        sess = self._session_of(graph)
+        if sess is None:
+            raise ValueError("probe_update() before any submit()")
+        changed = {t: f for t, f in task_rates.items() if f != 1.0}
+        queue_len = len(sess.queue_for(self.topology, policy))
+        if not changed:
+            return queue_len
+        if self.engine != "compiled":
+            return 0
+        new_sess = _GraphSession(_rescaled_graph(sess.g, changed),
+                                 self.topology, compiled=True)
+        prefix = self._clean_prefix(sess, new_sess, policy)
+        self._probe = (sess, policy, tuple(sorted(changed.items())),
+                       new_sess, prefix)
+        return prefix
+
+    def update(self, *, task_rates: Optional[Dict[int, float]] = None,
+               link_speed: Optional[Dict[str, float]] = None,
+               graph: Optional[SPG] = None,
+               policy: Optional[Policy] = None) -> Plan:
+        """Re-plan after drift, replaying only the affected trace suffix.
+
+        ``task_rates`` maps task -> arrival-rate factor on its
+        computational volume; ``link_speed`` overrides named link speeds
+        of the session topology (which invalidates every cached instance
+        — LDET and all message timings change, so the whole trace is
+        re-simulated).  ``graph`` selects which submitted graph to update
+        (default: the most recently submitted).  The returned plan is
+        bit-identical to a from-scratch ``submit`` of the modified graph
+        under the same pinned period (``Plan.period``).
+        """
+        policy = self.policy if policy is None else policy
+        sess = self._session_of(graph)
+        if sess is None:
+            raise ValueError("update() before any submit(): the session "
+                             "has no graph to re-plan")
+        changed = {t: f for t, f in (task_rates or {}).items() if f != 1.0}
+        link_changed = bool(link_speed)
+
+        if link_changed:
+            speeds = dict(self.topology.link_speed)
+            unknown = set(link_speed) - set(speeds)
+            if unknown:
+                raise ValueError(f"unknown links {sorted(unknown)}")
+            speeds.update(link_speed)
+            self.topology = Topology(
+                list(self.topology.proc_names), self.topology.rates.copy(),
+                speeds, {pair: list(rr)
+                         for pair, rr in self.topology.routes.items()},
+                ctml_mode=self.topology.ctml_mode)
+            # every compiled instance embeds the old link speeds
+            self._sessions = {}
+
+        if not changed and not link_changed:
+            self._sessions[id(sess.g)] = sess
+            self._last = sess
+            return self.submit(sess.g, policy)
+
+        probe = self._probe
+        self._probe = None
+        if probe is not None and not link_changed and \
+                probe[:3] == (sess, policy, tuple(sorted(changed.items()))):
+            new_sess, suffix_start = probe[3], probe[4]
+            new_g = new_sess.g
+        else:
+            new_g = _rescaled_graph(sess.g, changed) if changed else sess.g
+            new_sess = _GraphSession(new_g, self.topology,
+                                     compiled=self.engine == "compiled")
+            suffix_start = 0
+            if self.engine == "compiled" and not link_changed:
+                suffix_start = self._clean_prefix(sess, new_sess, policy)
+        new_sess.periods = dict(sess.periods)    # keep the pinned period
+
+        prev_traces: Optional[Dict[float, DecisionTrace]] = None
+        if suffix_start > 0:
+            prev_traces = sess.traces.get(policy)
+
+        plan = self._plan(new_sess, policy, prev_traces=prev_traces,
+                          suffix_start=suffix_start)
+        new_sess.plans[policy] = plan
+        # the originally submitted handle and the new graph both address
+        # this session; every map entry still pointing at the superseded
+        # session is evicted (else each update would leak one session)
+        new_sess.handles = [sess.handles[0], new_g]
+        self._sessions = {k: v for k, v in self._sessions.items()
+                          if v is not sess}
+        for h in new_sess.handles:
+            self._sessions[id(h)] = new_sess
+        self._last = new_sess
+        return plan
+
+    def _session_of(self, graph: Optional[SPG]) -> Optional[_GraphSession]:
+        if graph is None:
+            return self._last
+        sess = self._sessions.get(id(graph))
+        # identity check guards against id() reuse after a submitted graph
+        # handle was garbage-collected
+        if sess is not None and not any(h is graph for h in sess.handles):
+            return None
+        return sess
+
+    def _clean_prefix(self, old: _GraphSession, new: _GraphSession,
+                      policy: Policy) -> int:
+        """First queue position whose decision the drift can reach.
+
+        A position's decision (and its committed floats) depends only on
+        the task's comp/LDET rows, its inbound message volumes, the
+        shared period, and the state left by earlier positions.  Rows are
+        compared exactly (vectorized recomputation is deterministic), so
+        any position before the first affected one is provably unchanged
+        and can be re-committed from the memoized trace.
+        """
+        tg = self.topology
+        old_q = old.queue_for(tg, policy)
+        new_q = new.queue_for(tg, policy)
+        prefix = 0
+        for a, b in zip(old_q, new_q):
+            if a != b:
+                break
+            prefix += 1
+        comp_old = old.g.comp_matrix_for(tg.rates)
+        comp_new = new.g.comp_matrix_for(tg.rates)
+        comp_diff = np.any(comp_old != comp_new, axis=1)
+        row_diff = comp_diff | np.any(old.ldet != new.ldet, axis=1)
+        affected = set(np.flatnonzero(row_diff).tolist())
+        if new.g.tpl_proportional_ccr is not None:
+            # tpl(e_ij | p) = CCR * comp(i, p): successors' inbound
+            # message volumes changed with the source's comp row
+            for i in np.flatnonzero(comp_diff).tolist():
+                affected.update(new.g.succ[i])
+        if affected:
+            pos = {t: k for k, t in enumerate(new_q)}
+            prefix = min(prefix, min(pos[t] for t in affected))
+        return prefix
+
+    # -------------------------------------------------------------- plan
+    def _plan(self, sess: _GraphSession, policy: Policy,
+              prev_traces: Optional[Dict[float, DecisionTrace]] = None,
+              suffix_start: int = 0) -> Plan:
+        g = sess.g
+        queue = sess.queue_for(self.topology, policy)
+        inst = sess.inst
+        sim0 = inst.n_decisions_simulated if inst is not None else 0
+        rep0 = inst.n_decisions_replayed if inst is not None else 0
+        sims_resumed = sims_full = 0
+
+        if isinstance(policy, HSV_CC):
+            # alpha = 0 makes the period irrelevant to the schedule, but it
+            # is pinned anyway so resumed traces stay self-consistent
+            period = sess.periods.get(policy)
+            if period is None:
+                period = sess.default_period(self.topology)
+                sess.periods[policy] = period
+            if inst is None:
+                best = list_schedule(g, self.topology, queue, sess.rank,
+                                     alpha=0.0, ldet=sess.ldet)
+                sims_full = 1
+                sweep = None
+            else:
+                prev = (prev_traces or {}).get(0.0)
+                pos = suffix_start if prev is not None else 0
+                best, _, tr = inst.schedule_traced(
+                    queue, 0.0, period=period, want_bound=False,
+                    resume=prev, resume_pos=pos)
+                sess.traces[policy] = {0.0: tr}
+                sims_resumed, sims_full = (1, 0) if pos else (0, 1)
+                sweep = None
+        else:
+            if policy.sweep not in ("grid", "adaptive"):
+                raise ValueError(f"unknown sweep {policy.sweep!r}")
+            if inst is None and policy.sweep != "grid":
+                raise ValueError("sweep='adaptive' requires "
+                                 "engine='compiled'")
+            period = sess.periods.get(policy)
+            if period is None:
+                period = policy.period if policy.period is not None \
+                    else sess.default_period(self.topology)
+                sess.periods[policy] = period
+            if inst is None:
+                sweep = self._sweep_reference(sess, queue, policy, period)
+                sims_full = len(sweep.curve)
+            else:
+                traces: Dict[float, DecisionTrace] = {}
+                sweep, sims_resumed, sims_full = self._sweep_compiled(
+                    inst, queue, policy, period, traces,
+                    prev_traces, suffix_start)
+                sess.traces[policy] = traces
+            best = sweep.best
+
+        replay = ReplayStats(
+            suffix_start=suffix_start,
+            decisions_simulated=(inst.n_decisions_simulated - sim0)
+            if inst is not None else sims_full * g.n,
+            decisions_replayed=(inst.n_decisions_replayed - rep0)
+            if inst is not None else 0,
+            sims_resumed=sims_resumed, sims_full=sims_full)
+        holes = schedule_holes(best, include_unbounded=True) \
+            if isinstance(policy, HVLB_CC_IC) else None
+        return Plan(schedule=best, policy=policy, graph=g, period=period,
+                    sweep=sweep, holes=holes, replay=replay)
+
+    # ------------------------------------------------------------- sweeps
+    def _sweep_compiled(self, inst: CompiledInstance, queue: Sequence[int],
+                        policy: HVLB_CC_A, period: float,
+                        traces: Dict[float, DecisionTrace],
+                        prev_traces: Optional[Dict[float, DecisionTrace]],
+                        suffix_start: int
+                        ) -> Tuple[SweepResult, int, int]:
+        n_steps = int(round(policy.alpha_max / policy.alpha_step))
+        counters = [0, 0]                      # [resumed, full]
+
+        if policy.sweep == "grid" and n_steps == 0:
+            # single-point grid (the online re-plan unit): no rival alphas
+            # to bound against, so skip the per-decision crossing tracking.
+            # The schedule floats are unaffected by bound tracking, and the
+            # grid shape is a pure function of the policy, so resume traces
+            # stay consistent across updates.
+            prev = (prev_traces or {}).get(0.0)
+            pos = suffix_start if prev is not None else 0
+            s, _, tr = inst.schedule_traced(queue, 0.0, period=period,
+                                            want_bound=False,
+                                            resume=prev, resume_pos=pos)
+            traces[0.0] = tr
+            return (SweepResult(s, 0.0, [(0.0, s.makespan)]),
+                    1 if pos else 0, 0 if pos else 1)
+
+        def grid_pass(alphas: Sequence[float], curve, best, best_alpha):
+            k = 0
+            while k < len(alphas):
+                alpha = alphas[k]
+                prev = (prev_traces or {}).get(alpha)
+                pos = suffix_start if prev is not None else 0
+                counters[0 if pos else 1] += 1
+                s, bnd, tr = inst.schedule_traced(
+                    queue, alpha, period=period, want_bound=True,
+                    resume=prev, resume_pos=pos)
+                traces[alpha] = tr
+                curve.append((alpha, s.makespan))
+                if best is None or s.makespan < best.makespan - 1e-12:
+                    best, best_alpha = s, alpha
+                k += 1
+                # identical decision trace => identical schedule
+                while k < len(alphas) and alphas[k] < bnd - _SKIP_MARGIN:
+                    curve.append((alphas[k], s.makespan))
+                    k += 1
+            return best, best_alpha
+
+        curve: List[Tuple[float, float]] = []
+        if policy.sweep == "grid":
+            alphas = [k * policy.alpha_step for k in range(n_steps + 1)]
+            best, best_alpha = grid_pass(alphas, curve, None, 0.0)
+        else:                                  # adaptive coarse-to-fine
+            step, cf = policy.alpha_step, max(1, policy.coarse_factor)
+            coarse = [k * step for k in range(0, n_steps + 1, cf)]
+            if coarse[-1] != n_steps * step:
+                coarse.append(n_steps * step)
+            best, best_alpha = grid_pass(coarse, curve, None, 0.0)
+            assert best is not None
+            # refine around every coarse point within 2% of the optimum
+            cutoff = best.makespan * 1.02
+            refine: set = set()
+            for a, m in curve:
+                if m <= cutoff:
+                    ka = int(round(a / step))
+                    refine.update(range(max(0, ka - cf),
+                                        min(n_steps, ka + cf) + 1))
+            done = {round(a, 12) for a, _ in curve}
+            fine = [k * step for k in sorted(refine)
+                    if round(k * step, 12) not in done]
+            best, best_alpha = grid_pass(fine, curve, best, best_alpha)
+            curve.sort()
+        assert best is not None
+        return (SweepResult(best, best_alpha, curve),
+                counters[0], counters[1])
+
+    def _sweep_reference(self, sess: _GraphSession, queue: Sequence[int],
+                         policy: HVLB_CC_A, period: float) -> SweepResult:
+        g, tg = sess.g, self.topology
+        n_steps = int(round(policy.alpha_max / policy.alpha_step))
+        best: Optional[Schedule] = None
+        best_alpha = 0.0
+        curve: List[Tuple[float, float]] = []
+        for k in range(n_steps + 1):
+            alpha = k * policy.alpha_step
+            s = list_schedule(g, tg, queue, sess.rank, alpha=alpha,
+                              period=period, ldet=sess.ldet)
+            curve.append((alpha, s.makespan))
+            if best is None or s.makespan < best.makespan - 1e-12:
+                best, best_alpha = s, alpha
+        assert best is not None
+        return SweepResult(best, best_alpha, curve)

@@ -32,9 +32,23 @@ which every decision's winner provably keeps winning
 inside that interval reuse the simulated schedule without re-running the
 selection loop — consecutive alphas that would pick the same processor
 sequence skip re-simulation entirely.
+
+Finally the engine supports *decision-trace suffix replay* for the online
+rescheduling loop (:mod:`repro.core.api`).  :meth:`schedule_traced`
+records every committed decision — chosen processor, EST/EFT, the
+winner's message placements, and (when bound tracking) the per-candidate
+``(A_p, B_p)`` linear coefficients.  A later call may *resume* from such
+a trace: the first ``resume_pos`` positions are re-committed from the
+record (cheap state application, no candidate evaluation — the same
+floating-point commits in the same order, so the rebuilt link/processor
+state is bit-identical), and the full selection loop runs only for the
+suffix.  The caller is responsible for proving the prefix unchanged
+(see ``api.Scheduler.update``); the engine asserts the cheap
+consistency conditions (same alpha/period/queue prefix).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,6 +61,30 @@ from .topology import Topology
 _INF = float("inf")
 
 
+# One committed decision: (task, proc, est, eft, msgs, cand_A, cand_B).
+# ``msgs`` is the winner's [(pred, route, [(link_id, lst, lft), ...]), ...];
+# cand_A/cand_B are P-tuples of the linear selection coefficients (None for
+# exit tasks or when the run did not track the alpha bound).
+DecisionRecord = Tuple[int, int, float, float, list, Optional[tuple],
+                       Optional[tuple]]
+
+
+@dataclasses.dataclass
+class DecisionTrace:
+    """Memoized decision sequence of one :meth:`CompiledInstance._run`.
+
+    Replayable: committing ``records[:k]`` reconstructs the exact engine
+    state after the first ``k`` dequeues, so an update whose first ``k``
+    decisions are provably unchanged re-simulates only positions ``k..n``.
+    """
+
+    queue: Tuple[int, ...]
+    alpha: float
+    period: float
+    want_bound: bool
+    records: List[DecisionRecord]
+
+
 class CompiledInstance:
     """One-time preprocessing of an ``(SPG, Topology)`` pair.
 
@@ -57,7 +95,8 @@ class CompiledInstance:
     """
 
     def __init__(self, g: SPG, tg: Topology,
-                 rank: Optional[np.ndarray] = None) -> None:
+                 rank: Optional[np.ndarray] = None,
+                 ldet: Optional[np.ndarray] = None) -> None:
         self.g, self.tg = g, tg
         self.P = P = tg.n_procs
         self.n = g.n
@@ -66,9 +105,9 @@ class CompiledInstance:
         self.comp = comp
         self._comp = comp.tolist()
         self.rank = rank_matrix(g, tg) if rank is None else rank
-        self.ldet = ldet_cc(g, tg, self.rank)
+        self.ldet = ldet_cc(g, tg, self.rank) if ldet is None else ldet
         self._ldet = self.ldet.tolist()
-        self.default_period = float(sum(min(row) for row in self._comp))
+        self.default_period = g.default_period(tg.rates, P)
 
         self._link_names = tg.all_links()
         self._n_links = len(self._link_names)
@@ -97,12 +136,17 @@ class CompiledInstance:
         self._msg_plans: Dict[Tuple[int, int, int, int], List[
             Tuple[Tuple[int, ...], Tuple[float, ...],
                   Tuple[str, ...]]]] = {}
+        # Decision-replay accounting (read by api.Scheduler / the tests):
+        # positions evaluated with the full candidate loop vs positions
+        # re-committed from a memoized trace.
+        self.n_decisions_simulated = 0
+        self.n_decisions_replayed = 0
 
     # ------------------------------------------------------------------
     def schedule(self, queue: Sequence[int], alpha: float = 0.0,
                  period: Optional[float] = None) -> Schedule:
         """Array-core equivalent of :func:`~.scheduler.list_schedule`."""
-        s, _ = self._run(queue, alpha, period, want_bound=False)
+        s, _, _ = self._run(queue, alpha, period, want_bound=False)
         return s
 
     def schedule_with_bound(self, queue: Sequence[int], alpha: float,
@@ -111,12 +155,34 @@ class CompiledInstance:
         """Schedule at ``alpha`` and return ``(schedule, bound)`` where the
         decision trace — hence the schedule — is provably unchanged for
         every ``alpha' in [alpha, bound)``."""
-        return self._run(queue, alpha, period, want_bound=True)
+        s, bound, _ = self._run(queue, alpha, period, want_bound=True)
+        return s, bound
+
+    def schedule_traced(self, queue: Sequence[int], alpha: float = 0.0,
+                        period: Optional[float] = None,
+                        want_bound: bool = True,
+                        resume: Optional[DecisionTrace] = None,
+                        resume_pos: int = 0
+                        ) -> Tuple[Schedule, float, DecisionTrace]:
+        """Schedule and memoize the decision trace.
+
+        With ``resume``/``resume_pos`` the first ``resume_pos`` decisions
+        are re-committed from the given trace instead of re-evaluated —
+        the suffix-replay primitive behind :meth:`api.Scheduler.update`.
+        The caller must guarantee the prefix decisions are unchanged
+        (same comp/LDET rows, message volumes, and queue prefix); the
+        result is then bit-identical to a from-scratch run.
+        """
+        return self._run(queue, alpha, period, want_bound=want_bound,
+                         record=True, resume=resume, resume_pos=resume_pos)
 
     # ------------------------------------------------------------------
     def _run(self, queue: Sequence[int], alpha: float,
-             period: Optional[float], want_bound: bool
-             ) -> Tuple[Schedule, float]:
+             period: Optional[float], want_bound: bool,
+             record: bool = False,
+             resume: Optional[DecisionTrace] = None,
+             resume_pos: int = 0
+             ) -> Tuple[Schedule, float, Optional[DecisionTrace]]:
         g, tg = self.g, self.tg
         P = self.P
         comp = self._comp
@@ -144,8 +210,60 @@ class CompiledInstance:
         bound = _INF
         cand_A = [0.0] * P
         cand_B = [0.0] * P
+        records: List[DecisionRecord] = []
 
-        for j in queue:
+        start = 0
+        if resume is not None and resume_pos > 0:
+            if resume.alpha != alpha or resume.want_bound != want_bound \
+                    or resume.period != period:
+                raise ValueError("resume trace was recorded under different "
+                                 "(alpha, period, bound-tracking) settings")
+            if tuple(queue[:resume_pos]) != resume.queue[:resume_pos]:
+                raise ValueError("resume trace queue prefix mismatch")
+            start = resume_pos
+            # Re-commit the memoized prefix: the same floating-point state
+            # updates in the same order as the original run — no candidate
+            # evaluation, no route walks.
+            for rec in resume.records[:resume_pos]:
+                j, p, est, eft, msgs, ca, cb = rec
+                proc_of[j] = p
+                ast[j] = est
+                aft[j] = eft
+                proc_free[p] = eft
+                loads[p] += comp[j][p]
+                for (i, route, iv) in msgs:
+                    messages[(i, j)] = MessagePlacement(
+                        (i, j), proc_of[i], p, route,
+                        [(names[lid], s_, f) for (lid, s_, f) in iv])
+                    for (lid, _s, f) in iv:
+                        if f > link_free[lid]:
+                            link_free[lid] = f
+                scheduled[j] = True
+                if want_bound and ca is not None:
+                    # same crossing-point arithmetic as the live loop below,
+                    # on the memoized candidate coefficients
+                    a_c, b_c = ca[p], cb[p]
+                    for r in range(P):
+                        if r == p:
+                            continue
+                        d_b = b_c - cb[r]
+                        d_a = ca[r] - a_c
+                        scale = abs(a_c) + abs(ca[r]) + 1.0
+                        if d_b > 1e-15 * scale:
+                            a_star = d_a / d_b
+                            if a_star < bound:
+                                bound = a_star
+                        elif abs(d_b) <= 1e-15 * scale and \
+                                abs(d_a) <= 1e-12 * scale:
+                            if alpha < bound:
+                                bound = alpha
+                if record:
+                    records.append(rec)
+            self.n_decisions_replayed += resume_pos
+
+        sim_count = 0
+        for j in queue[start:] if start else queue:
+            sim_count += 1
             preds = preds_of[j]
             for i in preds:
                 if not scheduled[i]:
@@ -278,6 +396,13 @@ class CompiledInstance:
                         # is unreliable, force re-simulation next step
                         if alpha < bound:
                             bound = alpha
+            if record:
+                records.append((j, p, best_est, best_eft, best_msgs,
+                                tuple(cand_A) if track else None,
+                                tuple(cand_B) if track else None))
 
+        self.n_decisions_simulated += sim_count
+        trace = DecisionTrace(tuple(queue), alpha,
+                              period, want_bound, records) if record else None
         return Schedule(g, tg, np.array(proc_of), np.array(ast),
-                        np.array(aft), messages, alpha=alpha), bound
+                        np.array(aft), messages, alpha=alpha), bound, trace

@@ -146,6 +146,18 @@ class SPG:
             return self.tpl_proportional_ccr * comp_src
         return float(self.tpl[(i, j)])
 
+    def default_period(self, rates: Sequence[float], n_procs: int) -> float:
+        """Sum of per-task minimum computation times — the Definition-4.1
+        application-period proxy used when no explicit period is given.
+
+        Single source of truth for the reference scheduler, the compiled
+        engine, and the session API: the engine/reference bit-identity
+        guarantee for ``period=None`` depends on all of them summing the
+        same floats in the same order.
+        """
+        comp = self.comp_matrix_for(rates)[:, :n_procs]
+        return float(sum(min(row) for row in comp.tolist()))
+
     def critical_path_min_comp(self, rates: Sequence[float],
                                n_procs: int) -> float:
         """Denominator of SLR (Eq. 22): the min-computation critical path."""

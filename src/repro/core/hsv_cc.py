@@ -1,24 +1,25 @@
-"""HSV_CC baseline (Xie et al. [25]) — the algorithm the paper improves on.
+"""HSV_CC baseline (Xie et al. [25]) one-shot entry point — deprecated shim.
 
-Priorities: HPRV_CC = hrank * outd (Eq. 8).  Selection: EFT * LDET_CC.
-Equivalent to HVLB_CC with alpha = 0 (BP == 1).
+Wraps :class:`repro.core.api.Scheduler` with the :class:`HSV_CC` policy;
+bit-identical to the pre-session behaviour (priorities Eq. 8, selection
+EFT * LDET_CC — HVLB_CC with alpha = 0).  New code should use the
+session API directly.
 """
 from __future__ import annotations
 
-from .engine import CompiledInstance
+import warnings
+
+from .api import HSV_CC, Scheduler
 from .graph import SPG
-from .ranks import hprv_a, hrank, priority_queue, rank_matrix
-from .scheduler import Schedule, list_schedule
+from .scheduler import Schedule
 from .topology import Topology
+
+__all__ = ["schedule_hsv_cc"]
 
 
 def schedule_hsv_cc(g: SPG, tg: Topology,
                     engine: str = "compiled") -> Schedule:
-    rank = rank_matrix(g, tg)
-    h = rank.mean(axis=1)
-    queue = priority_queue(hprv_a(g, tg, rank), h)
-    if engine == "reference":
-        return list_schedule(g, tg, queue, rank, alpha=0.0)
-    if engine != "compiled":
-        raise ValueError(f"unknown engine {engine!r}")
-    return CompiledInstance(g, tg, rank=rank).schedule(queue, alpha=0.0)
+    """Deprecated: ``Scheduler(tg, policy=HSV_CC()).submit(g).schedule``."""
+    warnings.warn("schedule_hsv_cc is deprecated; use repro.core.Scheduler "
+                  "with the HSV_CC policy", DeprecationWarning, stacklevel=2)
+    return Scheduler(tg, policy=HSV_CC(), engine=engine).submit(g).schedule

@@ -1,77 +1,25 @@
-"""HVLB_CC (A) and (B): load-balanced, contention-aware list scheduling
-(Algorithm 1 of the paper).
+"""HVLB_CC (A) and (B) one-shot entry points — deprecated shims.
 
-Variant A keeps HSV_CC's prioritizer (Eq. 8); variant B uses the
-depth^2-damped prioritizer (Eq. 9) that makes arbitrary stream-processing
-graphs schedulable.  Both sweep the balancing weight ``alpha`` and keep the
-minimum-makespan schedule.
-
-The sweep runs on the compiled engine by default: one
-:class:`~repro.core.engine.CompiledInstance` is shared across every alpha
-step, and each simulated step reports the alpha interval over which its
-decision trace stays optimal, so grid points inside the interval reuse the
-schedule without re-simulation (see ``engine.py``).  ``engine="reference"``
-re-runs the readable ``list_schedule`` at every step instead — the two
-paths produce bit-identical results.
+These wrap :class:`repro.core.api.Scheduler` (a throwaway single-graph
+session) and produce bit-identical results to the pre-session API; new
+code should hold a ``Scheduler`` instead, which shares the compiled
+instance, priority queues, and decision traces across calls and exposes
+``submit_many`` / incremental ``update``.  The shims are kept so the
+paper-experiment drivers and downstream users keep working; they emit a
+:class:`DeprecationWarning` and will be removed once nothing in-tree
+imports them (see DESIGN.md §4, "Deprecation policy").
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import warnings
+from typing import Optional
 
-import numpy as np
-
-from .engine import CompiledInstance
+from .api import HVLB_CC_A, HVLB_CC_B, Scheduler, SweepResult
 from .graph import SPG
-from .ranks import hprv_a, hprv_b, ldet_cc, priority_queue, rank_matrix
-from .scheduler import Schedule, list_schedule
+from .scheduler import Schedule
 from .topology import Topology
 
-# Grid alphas closer than this to a predicted trace-flip point are
-# re-simulated rather than skipped (guards the last-ulp difference between
-# the linear prediction A + B*alpha and the simulated Def. 4.1 value).
-_SKIP_MARGIN = 1e-6
-
-
-@dataclasses.dataclass
-class SweepResult:
-    best: Schedule
-    best_alpha: float
-    curve: List[Tuple[float, float]]     # (alpha, makespan) — Fig. 5 data
-
-
-def _queue_for(g: SPG, tg: Topology, variant: str, rank: np.ndarray,
-               depth_power: int, outd_mode: str) -> List[int]:
-    h = rank.mean(axis=1)
-    if variant.upper() == "A":
-        prv = hprv_a(g, tg, rank)
-    elif variant.upper() == "B":
-        prv = hprv_b(g, tg, rank, depth_power=depth_power,
-                     outd_mode=outd_mode)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    return priority_queue(prv, h)
-
-
-def _sweep_grid(inst: CompiledInstance, queue: Sequence[int],
-                alphas: Sequence[float], period: Optional[float],
-                curve: List[Tuple[float, float]],
-                best: Optional[Schedule], best_alpha: float
-                ) -> Tuple[Optional[Schedule], float]:
-    """Engine sweep over a sorted alpha grid with trace-interval skipping."""
-    k = 0
-    while k < len(alphas):
-        alpha = alphas[k]
-        s, bnd = inst.schedule_with_bound(queue, alpha, period=period)
-        curve.append((alpha, s.makespan))
-        if best is None or s.makespan < best.makespan - 1e-12:
-            best, best_alpha = s, alpha
-        k += 1
-        # identical decision trace => identical schedule: skip re-simulation
-        while k < len(alphas) and alphas[k] < bnd - _SKIP_MARGIN:
-            curve.append((alphas[k], s.makespan))
-            k += 1
-    return best, best_alpha
+__all__ = ["SweepResult", "schedule_hvlb_cc", "schedule_hvlb_cc_best"]
 
 
 def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
@@ -84,71 +32,31 @@ def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
                      coarse_factor: int = 10) -> SweepResult:
     """Algorithm 1: sweep alpha in [0, alpha_max], keep min makespan.
 
-    ``engine="compiled"`` (default) shares one ``CompiledInstance`` across
-    the sweep and skips re-simulating alphas whose decision trace is
-    provably unchanged; ``engine="reference"`` runs ``list_schedule`` per
-    step.  ``sweep="adaptive"`` (opt-in, compiled only) evaluates a coarse
-    grid of ``coarse_factor * alpha_step`` first and refines at
-    ``alpha_step`` only around the best coarse plateau — the curve then
-    contains just the evaluated points.
+    .. deprecated:: use ``Scheduler(tg, policy=HVLB_CC_A(...)).submit(g)``;
+       the returned ``Plan.sweep`` is this function's ``SweepResult``.
     """
-    if sweep not in ("grid", "adaptive"):
-        raise ValueError(f"unknown sweep {sweep!r}")
-    if engine == "reference" and sweep != "grid":
-        raise ValueError("sweep='adaptive' requires engine='compiled'")
-    rank = rank_matrix(g, tg)
-    queue = _queue_for(g, tg, variant, rank, depth_power, outd_mode)
-    n_steps = int(round(alpha_max / alpha_step))
-
-    if engine == "reference":
-        ldet = ldet_cc(g, tg, rank)
-        best: Optional[Schedule] = None
-        best_alpha = 0.0
-        curve: List[Tuple[float, float]] = []
-        for k in range(n_steps + 1):
-            alpha = k * alpha_step
-            s = list_schedule(g, tg, queue, rank, alpha=alpha, period=period,
-                              ldet=ldet)
-            curve.append((alpha, s.makespan))
-            if best is None or s.makespan < best.makespan - 1e-12:
-                best, best_alpha = s, alpha
-        assert best is not None
-        return SweepResult(best, best_alpha, curve)
-    if engine != "compiled":
-        raise ValueError(f"unknown engine {engine!r}")
-
-    inst = CompiledInstance(g, tg, rank=rank)
-    curve = []
-    if sweep == "grid":
-        alphas = [k * alpha_step for k in range(n_steps + 1)]
-        best, best_alpha = _sweep_grid(inst, queue, alphas, period,
-                                       curve, None, 0.0)
-    elif sweep == "adaptive":
-        coarse = [k * alpha_step for k in range(0, n_steps + 1,
-                                                max(1, coarse_factor))]
-        if coarse[-1] != n_steps * alpha_step:
-            coarse.append(n_steps * alpha_step)
-        best, best_alpha = _sweep_grid(inst, queue, coarse, period,
-                                       curve, None, 0.0)
-        assert best is not None
-        # refine at alpha_step around every coarse point within 2% of the
-        # coarse optimum (a single window can miss a narrow global plateau)
-        cutoff = best.makespan * 1.02
-        refine_steps: set = set()
-        for a, m in curve:
-            if m <= cutoff:
-                ka = int(round(a / alpha_step))
-                refine_steps.update(range(max(0, ka - coarse_factor),
-                                          min(n_steps, ka + coarse_factor) + 1))
-        done = {round(a, 12) for a, _ in curve}
-        fine = [k * alpha_step for k in sorted(refine_steps)
-                if round(k * alpha_step, 12) not in done]
-        best, best_alpha = _sweep_grid(inst, queue, fine, period,
-                                       curve, best, best_alpha)
-        curve.sort()
-    assert best is not None
-    return SweepResult(best, best_alpha, curve)
+    warnings.warn("schedule_hvlb_cc is deprecated; use "
+                  "repro.core.Scheduler with an HVLB_CC_A/HVLB_CC_B policy",
+                  DeprecationWarning, stacklevel=2)
+    if variant.upper() == "A":
+        policy = HVLB_CC_A(alpha_max=alpha_max, alpha_step=alpha_step,
+                           period=period, sweep=sweep,
+                           coarse_factor=coarse_factor)
+    elif variant.upper() == "B":
+        policy = HVLB_CC_B(alpha_max=alpha_max, alpha_step=alpha_step,
+                           period=period, sweep=sweep,
+                           coarse_factor=coarse_factor,
+                           depth_power=depth_power, outd_mode=outd_mode)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return Scheduler(tg, policy=policy, engine=engine).submit(g).sweep
 
 
 def schedule_hvlb_cc_best(g: SPG, tg: Topology, **kw) -> Schedule:
-    return schedule_hvlb_cc(g, tg, **kw).best
+    """Deprecated: ``Scheduler(...).submit(g).schedule``."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = schedule_hvlb_cc(g, tg, **kw)
+    warnings.warn("schedule_hvlb_cc_best is deprecated; use "
+                  "repro.core.Scheduler", DeprecationWarning, stacklevel=2)
+    return res.best

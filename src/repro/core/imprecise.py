@@ -23,8 +23,17 @@ from .graph import SPG
 from .scheduler import Schedule
 
 
-def schedule_holes(s: Schedule) -> Dict[int, float]:
-    """Maximum extension time available after each task (Eqs. 20-21)."""
+def schedule_holes(s: Schedule,
+                   include_unbounded: bool = False) -> Dict[int, float]:
+    """Maximum extension time available after each task (Eqs. 20-21).
+
+    A task with *nothing* after it — no later task on its processor, no
+    successor anywhere — has an unbounded hole.  By default such tasks
+    are omitted (matching tasks with no usable hole); with
+    ``include_unbounded=True`` they are reported as ``float("inf")``,
+    which is what the imprecise-computation consumers want (``min(op_req,
+    inf) == op_req``: the optional part always fits).
+    """
     g, tg = s.graph, s.topology
     holes: Dict[int, float] = {}
     link_ivs = s.link_intervals()
@@ -59,7 +68,10 @@ def schedule_holes(s: Schedule) -> Dict[int, float]:
                 bounds.append(m.lst + max(0.0, slack))
 
         if not bounds:
-            continue            # exit task with nothing after it: unbounded
+            # exit task with nothing after it: unbounded hole
+            if include_unbounded:
+                holes[p_task] = float("inf")
+            continue
         hole = min(bounds) - aft
         if hole > 1e-9:
             holes[p_task] = hole

@@ -203,8 +203,7 @@ def list_schedule(g: SPG, tg: Topology, queue: Sequence[int],
     if ldet is None:
         ldet = ldet_cc(g, tg, rank)
     if period is None:
-        period = float(sum(min(g.comp(i, p, tg.rates) for p in range(P))
-                           for i in range(g.n)))
+        period = g.default_period(tg.rates, P)
     proc_free = np.zeros(P)
     link_free: Dict[str, float] = {}
     proc_of = np.full(g.n, -1, dtype=int)

@@ -19,7 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (Topology, schedule_hsv_cc, schedule_hvlb_cc,
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, Scheduler, Topology,
                         load_balance)
 from repro.core.graph import SPG
 from repro.core.scheduler import Schedule
@@ -78,19 +78,22 @@ class PlacementPlan:
         return out
 
 
+def _policy_for(algorithm: str, alpha_max: float):
+    if algorithm == "hsv":
+        return HSV_CC()
+    if algorithm == "hvlb_a":
+        return HVLB_CC_A(alpha_max=alpha_max, alpha_step=0.05)
+    if algorithm == "hvlb_b":
+        return HVLB_CC_B(alpha_max=alpha_max, alpha_step=0.05)
+    raise ValueError(algorithm)
+
+
 def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
                    alpha_max: float = 3.0,
                    engine: str = "compiled") -> PlacementPlan:
-    if algorithm == "hsv":
-        s = schedule_hsv_cc(g, tg, engine=engine)
-    elif algorithm == "hvlb_a":
-        s = schedule_hvlb_cc(g, tg, variant="A", alpha_max=alpha_max,
-                             alpha_step=0.05, engine=engine).best
-    elif algorithm == "hvlb_b":
-        s = schedule_hvlb_cc(g, tg, variant="B", alpha_max=alpha_max,
-                             alpha_step=0.05, engine=engine).best
-    else:
-        raise ValueError(algorithm)
+    sched = Scheduler(tg, policy=_policy_for(algorithm, alpha_max),
+                      engine=engine)
+    s = sched.submit(g).schedule
     return PlacementPlan(
         schedule=s, algorithm=algorithm, makespan_s=s.makespan,
         load_balance=load_balance(s),

@@ -81,6 +81,12 @@ def serving_query_graph(cfg: ModelConfig, shape: ShapeConfig,
     application sink.  The backbone output node acquires out-degree
     ``n_queries`` > its predecessors' out-degree — the stream-processing
     shape of the paper.
+
+    The returned SPG carries ``query_ops``: query index -> the node ids
+    of its ``(op1, op2, sink)`` operators.  Consumers (``serve.DSMSEngine``)
+    must use this mapping instead of recomputing node positions from the
+    graph size, so graph-shape changes cannot silently misattribute
+    schedule holes.
     """
     base = model_stage_graph(cfg, shape, n_stage_units)
     weights: List[float] = list(base.weights)
@@ -88,6 +94,7 @@ def serving_query_graph(cfg: ModelConfig, shape: ShapeConfig,
     tpl: Dict[Tuple[int, int], float] = dict(base.tpl)
     act = tpl[base.edges[0]]
     hub = base.n - 1                      # head output feeds every query
+    query_ops: Dict[int, Tuple[int, int, int]] = {}
     rng = np.random.default_rng(0)
     for q in range(n_queries):
         # operator 1 (filter/map) <- hub
@@ -109,7 +116,9 @@ def serving_query_graph(cfg: ModelConfig, shape: ShapeConfig,
         weights.append(float(weights[hub]) * 0.01)
         edges.append((op2, sink))
         tpl[(op2, sink)] = act * 0.01
+        query_ops[q] = (op1, op2, sink)
     g = SPG(n=len(weights), edges=edges, weights=np.asarray(weights),
             name=f"{cfg.name}-dsms-{n_queries}q")
     g.tpl.update(tpl)
+    g.query_ops = query_ops
     return g

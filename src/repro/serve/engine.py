@@ -6,18 +6,27 @@ execute continuously); each query is an operator chain over the decoded
 model output (the "stream").  The engine:
 
   1. builds the serving SPG (backbone + query operators),
-  2. statically schedules it with HVLB_CC (B) onto the slice topology
-     (HSV_CC cannot order these multi-sink graphs — Section 3.2),
+  2. statically schedules it through a long-lived
+     :class:`repro.core.Scheduler` session with the imprecise-computation
+     policy ``HVLB_CC_IC`` (HSV_CC cannot order these multi-sink graphs —
+     Section 3.2); the plan carries the schedule holes directly,
   3. runs batched decode steps, executing query operators according to
      the static schedule,
   4. supports imprecise-computation queries: each operator has a mandatory
      function and an optional refinement that only runs inside its
      schedule hole (HVLB_CC_IC, Section 4.4).
+
+Registration is O(1): ``register()`` only marks the plan dirty, and the
+schedule is recomputed once — lazily, on the first ``step()`` (or an
+explicit ``ensure_plan()``) after any number of registrations.  ``replans``
+counts the actual scheduler invocations, pinned by the regression test in
+``tests/test_session_api.py``.  Task-time drift re-plans go through
+``Scheduler.update`` (:meth:`retime`), which replays only the affected
+suffix of the decision trace.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -25,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
-from repro.core import schedule_holes, schedule_hvlb_cc
+from repro.core import HVLB_CC_IC, Scheduler
 from repro.core.graph import SPG
 from repro.models import model as M
 from repro.planner import serving_query_graph, tpu_slice_topology
@@ -61,28 +70,53 @@ class DSMSEngine:
             lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))
         self.topology = tpu_slice_topology(n_slices=n_slices,
                                            chips_per_slice=4, pods=1)
+        self.scheduler = Scheduler(
+            self.topology, policy=HVLB_CC_IC(alpha_max=2.0, alpha_step=0.1))
         self.plan = None
         self.holes: Dict[int, float] = {}
+        self.replans = 0                    # scheduler invocations (test-pinned)
+        self._dirty = True
+        self._graph: Optional[SPG] = None
+        self._query_nodes: Dict[int, int] = {}
 
     def register(self, q: Query) -> None:
-        """Register a continuous query (before streaming starts)."""
-        self.queries.append(q)
-        self._replan()
+        """Register a continuous query (before streaming starts).
 
-    def _replan(self) -> None:
+        O(1): the schedule is recomputed lazily on the next ``step()`` —
+        registering Q queries costs one re-plan, not Q.
+        """
+        self.queries.append(q)
+        self._dirty = True
+
+    def ensure_plan(self) -> None:
+        """Re-plan if the query set changed since the last schedule."""
+        if not self._dirty:
+            return
         shape = dataclasses.replace(SHAPES["decode_32k"],
                                     global_batch=self.batch,
                                     seq_len=self.max_seq)
         g = serving_query_graph(self.cfg, shape,
                                 n_queries=max(1, len(self.queries)))
-        res = schedule_hvlb_cc(g, self.topology, variant="B",
-                               alpha_max=2.0, alpha_step=0.1)
-        self.plan = res.best
-        self.holes = schedule_holes(self.plan)
-        # map query q to its first operator node (backbone is nodes [0..k))
-        n_backbone = g.n - 3 * max(1, len(self.queries))
-        self._query_nodes = {qi: n_backbone + 3 * qi
+        plan = self.scheduler.submit(g)
+        self.replans += 1
+        self._graph = g
+        self.plan = plan.schedule
+        self.holes = plan.holes
+        # query q -> its first operator node, from the graph's own mapping
+        self._query_nodes = {qi: g.query_ops[qi][0]
                              for qi in range(len(self.queries))}
+        self._dirty = False
+
+    def retime(self, task_rates: Dict[int, float]) -> None:
+        """Re-plan after task computation-time drift (Section 4.4's varying
+        arrival rates) via the incremental ``Scheduler.update`` path."""
+        self.ensure_plan()
+        plan = self.scheduler.update(task_rates=task_rates,
+                                     graph=self._graph)
+        self.replans += 1
+        self._graph = plan.graph
+        self.plan = plan.schedule
+        self.holes = plan.holes
 
     def _has_hole(self, qi: int, q: Query) -> bool:
         node = self._query_nodes.get(qi)
@@ -95,6 +129,7 @@ class DSMSEngine:
 
     def step(self, tokens: np.ndarray) -> StepResult:
         """Feed one token per stream; run queries per the static plan."""
+        self.ensure_plan()
         t = jnp.asarray(tokens.reshape(self.batch, 1), jnp.int32)
         pos = jnp.full((self.batch,), self.pos, jnp.int32)
         logits, self.cache = self._step(self.params, self.cache, t, pos)

@@ -1,4 +1,4 @@
-"""Compiled engine == reference scheduler, bit for bit.
+"""Compiled engine == reference scheduler == session API, bit for bit.
 
 The engine (repro.core.engine.CompiledInstance) must reproduce the readable
 ``list_schedule`` exactly — same processor assignments, same start/finish
@@ -6,12 +6,17 @@ floats, same message routes and per-link intervals — on the paper's worked
 example and on hundreds of random TGFF graphs across CCR regimes, rate
 patterns, and both out-degree-constraint settings.  No tolerance: the
 engine performs the same IEEE operations in the same order.
+
+The session API (``Scheduler.submit``) and the deprecated one-shot shims
+(``schedule_hsv_cc`` / ``schedule_hvlb_cc``) are asserted against the same
+reference on the same graph corpus: shim == session == reference.
 """
 import numpy as np
 import pytest
 
-from repro.core import (CompiledInstance, paper_spg, paper_topology,
-                        random_spg, schedule_hsv_cc, schedule_hvlb_cc)
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, CompiledInstance,
+                        Scheduler, paper_spg, paper_topology, random_spg,
+                        schedule_hsv_cc, schedule_hvlb_cc)
 from repro.core.ranks import (hprv_b, ldet_cc, priority_queue,
                               rank_matrix, rank_matrix_reference)
 from repro.core.scheduler import Schedule, list_schedule
@@ -48,8 +53,10 @@ def _case(seed: int):
 # ---------------------------------------------------------------- paper
 def test_paper_example_hsv_identical():
     g, tg = paper_spg(), paper_topology()
-    assert_identical(schedule_hsv_cc(g, tg, engine="reference"),
-                     schedule_hsv_cc(g, tg, engine="compiled"))
+    ref = schedule_hsv_cc(g, tg, engine="reference")
+    assert_identical(ref, schedule_hsv_cc(g, tg, engine="compiled"))
+    # session == shim == reference
+    assert_identical(ref, Scheduler(tg).submit(g, HSV_CC()).schedule)
 
 
 @pytest.mark.parametrize("variant", ["A", "B"])
@@ -62,6 +69,14 @@ def test_paper_example_sweep_identical(variant):
     assert ref.curve == eng.curve                  # every grid point exact
     assert ref.best_alpha == eng.best_alpha
     assert_identical(ref.best, eng.best)
+    # session == shim == reference, on both engines
+    policy = (HVLB_CC_A if variant == "A" else HVLB_CC_B)(
+        alpha_max=3.0, period=150.0)
+    for engine in ("compiled", "reference"):
+        plan = Scheduler(tg, engine=engine).submit(g, policy)
+        assert plan.sweep.curve == ref.curve
+        assert plan.best_alpha == ref.best_alpha
+        assert_identical(plan.schedule, ref.best)
 
 
 def test_rank_matrix_vectorized_bit_identical_paper():
@@ -73,7 +88,9 @@ def test_rank_matrix_vectorized_bit_identical_paper():
 @pytest.mark.parametrize("seed", range(200))
 def test_engine_equivalence_random(seed):
     """Bit-identical schedules on 200 random TGFF graphs; every engine
-    output also passes Schedule.validate()."""
+    output also passes Schedule.validate().  The session API is held to
+    the same standard: its best schedule must equal the reference's
+    best-of-grid bit for bit."""
     g, tg = _case(seed)
     r = rank_matrix(g, tg)
     assert np.array_equal(r, rank_matrix_reference(g, tg))
@@ -81,11 +98,23 @@ def test_engine_equivalence_random(seed):
     q = priority_queue(hprv_b(g, tg, r), r.mean(1))
     inst = CompiledInstance(g, tg, rank=r)
     ldet = ldet_cc(g, tg, r)
+    refs = {}
     for alpha in (0.0, 0.85):
         ref = list_schedule(g, tg, q, r, alpha=alpha, ldet=ldet)
         eng = inst.schedule(q, alpha=alpha)
         assert_identical(ref, eng)
         eng.validate()
+        refs[alpha] = ref
+    # session sweep over the same {0.0, 0.85} grid: curve points and the
+    # kept best must match the reference runs exactly (shim == session ==
+    # reference; the shim path is itself a Scheduler session now)
+    plan = Scheduler(tg).submit(g, HVLB_CC_B(alpha_max=0.85,
+                                             alpha_step=0.85))
+    assert plan.sweep.makespans.tolist() == \
+        [refs[0.0].makespan, refs[0.85].makespan]
+    ref_best = refs[0.0] if not (refs[0.85].makespan <
+                                 refs[0.0].makespan - 1e-12) else refs[0.85]
+    assert_identical(plan.schedule, ref_best)
 
 
 @pytest.mark.parametrize("seed", range(0, 200, 7))

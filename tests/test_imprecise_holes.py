@@ -1,0 +1,114 @@
+"""Edge cases of imprecise.schedule_holes (Eqs. 20-21).
+
+Covers the two paths the paper-example test cannot reach:
+  * an exit task with *no* bounds at all — no later task on its
+    processor, no successors — whose hole is unbounded,
+  * a cross-processor successor whose message re-timing (LST'', Eq. 21)
+    is capped by a rival message queued behind it on the route's link,
+    not by the successor's start time.
+
+Schedules are hand-built so every timing quantity is exact by
+construction.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SPG, Schedule, Topology, precision, schedule_holes
+from repro.core.scheduler import MessagePlacement
+
+
+def _two_proc_topology():
+    """p0 -L- p1: a single contended link."""
+    return Topology(proc_names=["p0", "p1"], rates=np.array([1.0, 1.0]),
+                    link_speed={"L": 1.0}, routes={(0, 1): [("L",)]})
+
+
+# ------------------------------------------------------- unbounded hole
+def test_exit_task_with_no_bounds_is_unbounded():
+    """Last task on its processor + no successors: nothing constrains the
+    optional part.  Omitted by default; inf with include_unbounded."""
+    tg = _two_proc_topology()
+    g = SPG(n=2, edges=[], weights=np.array([4.0, 6.0]))
+    s = Schedule(g, tg, proc=np.array([0, 1]), start=np.array([0.0, 0.0]),
+                 finish=np.array([4.0, 6.0]), messages={})
+    assert schedule_holes(s) == {}
+    holes = schedule_holes(s, include_unbounded=True)
+    assert holes == {0: float("inf"), 1: float("inf")}
+    # the IC consumers treat inf correctly: the optional part always fits
+    assert precision(4.0, holes[0], lam=3.0, ic=True) == 1.0
+    assert precision(4.0, 0.0, lam=3.0, ic=False) == pytest.approx(1 / 3)
+
+
+def test_exit_task_followed_on_processor_is_bounded():
+    """An exit task is still bounded by the next task on its processor."""
+    tg = _two_proc_topology()
+    g = SPG(n=2, edges=[], weights=np.array([4.0, 6.0]))
+    s = Schedule(g, tg, proc=np.array([0, 0]), start=np.array([0.0, 9.0]),
+                 finish=np.array([4.0, 15.0]), messages={})
+    holes = schedule_holes(s, include_unbounded=True)
+    assert holes[0] == pytest.approx(5.0)          # 9 - 4, condition (a)
+    assert holes[1] == float("inf")
+
+
+# ------------------------------------------------------ Eq. 21 slack cap
+def _cross_proc_schedule(rival_start):
+    """Task 0 (p0) -> task 1 (p1) over link L; an unrelated message
+    (2 -> 3, running p1 -> p0 over the same bidirectional link) sits on
+    L starting at ``rival_start``.
+
+    Task 0 finishes at 4; its message occupies L over [4, 6]; task 1
+    starts at 20 (lots of successor-side slack); p0's next task (3)
+    starts at 30 so condition (a) never binds.  The rival message
+    occupies [rival_start, rival_start + 2].
+    """
+    tg = _two_proc_topology()
+    g = SPG(n=4, edges=[(0, 1), (2, 3)],
+            weights=np.array([4.0, 5.0, 3.0, 1.0]))
+    m01 = MessagePlacement((0, 1), 0, 1, ("L",), [("L", 4.0, 6.0)])
+    m23 = MessagePlacement((2, 3), 1, 0, ("L",),
+                           [("L", rival_start, rival_start + 2.0)])
+    s = Schedule(
+        g, tg,
+        proc=np.array([0, 1, 1, 0]),
+        start=np.array([0.0, 20.0, 4.0, 30.0]),
+        finish=np.array([4.0, 25.0, 7.0, 31.0]),
+        messages={(0, 1): m01, (2, 3): m23})
+    return g, s
+
+
+def test_message_retiming_capped_by_queued_rival():
+    """Eq. 21: LST'' slack is the gap to the rival queued behind the
+    message on its link, not the (larger) successor-side slack."""
+    g, s = _cross_proc_schedule(rival_start=9.0)
+    holes = schedule_holes(s)
+    # successor-side slack: start(1) - LFT = 20 - 6 = 14; link-side rival
+    # gap: 9 - 6 = 3 < 14, so LST'' = LST + 3 = 7 and hole(0) = 7 - 4 = 3.
+    assert holes[0] == pytest.approx(3.0)
+
+
+def test_message_retiming_uses_successor_slack_without_rival():
+    """With the rival far away, the successor's start is the binding
+    constraint (slack = 14, capped at 14 by start(1))."""
+    g, s = _cross_proc_schedule(rival_start=50.0)
+    holes = schedule_holes(s)
+    # slack = min(20 - 6, 50 - 6) = 14 -> LST'' = 4 + 14, hole = 18 - 4.
+    assert holes[0] == pytest.approx(14.0)
+
+
+def test_message_retiming_rival_queued_immediately():
+    """A rival packed right behind the message leaves zero slack: the hole
+    collapses to LST - AFT = 0 and is dropped."""
+    g, s = _cross_proc_schedule(rival_start=6.0)
+    holes = schedule_holes(s)
+    assert 0 not in holes
+
+
+def test_same_processor_successor_bound():
+    """Condition (b): a same-processor successor bounds the hole by its
+    start time directly."""
+    tg = _two_proc_topology()
+    g = SPG(n=2, edges=[(0, 1)], weights=np.array([4.0, 5.0]))
+    s = Schedule(g, tg, proc=np.array([0, 0]), start=np.array([0.0, 10.0]),
+                 finish=np.array([4.0, 15.0]), messages={})
+    holes = schedule_holes(s)
+    assert holes[0] == pytest.approx(6.0)          # 10 - 4

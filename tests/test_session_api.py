@@ -1,0 +1,289 @@
+"""The Scheduler session API: submit/update/submit_many semantics.
+
+Bit-identity of the session against the one-shot shims and the readable
+reference lives in tests/test_engine_equivalence.py; this file covers the
+session-only behaviour — incremental ``update`` (trace-suffix replay,
+asserted via the decision-replay counters), ``probe_update``, fleet
+``submit_many``, the imprecise-computation policy, the SweepResult array
+accessors, and the serving engine's lazy re-planning.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC, Scheduler,
+                        paper_spg, paper_topology, random_spg)
+from repro.core.api import _disjoint_union
+
+
+def assert_same_schedule(a, b):
+    assert np.array_equal(a.proc, b.proc)
+    assert np.array_equal(a.start, b.start)       # exact, no tolerance
+    assert np.array_equal(a.finish, b.finish)
+    assert set(a.messages) == set(b.messages)
+    for e, ma in a.messages.items():
+        mb = b.messages[e]
+        assert ma.route == mb.route and ma.intervals == mb.intervals
+
+
+def _case(seed, n=30):
+    rng = np.random.default_rng(seed)
+    tg = paper_topology()
+    g = random_spg(n, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    return g, tg
+
+
+# ------------------------------------------------------------- update
+@pytest.mark.parametrize("seed,factor", [(0, 0.8), (1, 0.8), (2, 1.5),
+                                         (3, 0.9), (4, 2.0), (5, 0.7),
+                                         (6, 1.2), (7, 0.95)])
+def test_update_task_rates_matches_fresh_submit(seed, factor):
+    """update() == from-scratch submit of the modified graph (bit-exact),
+    re-simulating only a trace suffix."""
+    g, tg = _case(seed)
+    policy = HVLB_CC_B(alpha_max=2.0, alpha_step=0.25)
+    sched = Scheduler(tg, policy=policy)
+    plan = sched.submit(g)
+    task = int(np.argmax(plan.schedule.start))    # a late task
+    upd = sched.update(task_rates={task: factor})
+
+    fresh = Scheduler(tg).submit(
+        upd.graph, dataclasses.replace(policy, period=plan.period))
+    assert_same_schedule(upd.schedule, fresh.schedule)
+    assert upd.sweep.curve == fresh.sweep.curve
+    assert upd.sweep.best_alpha == fresh.sweep.best_alpha
+    # only a suffix was re-simulated (the counters prove replay happened)
+    if upd.replay.suffix_start > 0:
+        assert upd.replay.decisions_replayed > 0
+        assert upd.replay.decisions_simulated < \
+            fresh.replay.decisions_simulated
+
+
+def test_update_replays_long_prefix_for_local_drift():
+    """A sink whose rank influence stays local keeps most of the trace."""
+    g, tg = _case(11, n=60)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+    sched = Scheduler(tg, policy=policy)
+    plan = sched.submit(g)
+    sinks = [t for t in range(g.n) if not g.succ[t]]
+    task = max(sinks, key=lambda t: sched.probe_update(task_rates={t: 0.9}))
+    probed = sched.probe_update(task_rates={task: 0.9})
+    upd = sched.update(task_rates={task: 0.9})
+    assert upd.replay.suffix_start == probed
+    assert upd.replay.decisions_replayed > 0
+    fresh = Scheduler(tg).submit(
+        upd.graph, dataclasses.replace(policy, period=plan.period))
+    assert_same_schedule(upd.schedule, fresh.schedule)
+
+
+def test_update_chain_stays_consistent():
+    """Consecutive updates compound on the current graph."""
+    g, tg = _case(21)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    sched = Scheduler(tg, policy=policy)
+    plan = sched.submit(g)
+    u1 = sched.update(task_rates={5: 1.3})
+    u2 = sched.update(task_rates={17: 0.6})
+    assert u2.graph.weights[5] == pytest.approx(g.weights[5] * 1.3)
+    assert u2.graph.weights[17] == pytest.approx(g.weights[17] * 0.6)
+    fresh = Scheduler(tg).submit(
+        u2.graph, dataclasses.replace(policy, period=plan.period))
+    assert_same_schedule(u2.schedule, fresh.schedule)
+
+
+def test_update_link_speed_matches_fresh_submit():
+    """Link drift invalidates everything (LDET changes) but still matches
+    a from-scratch submit on the updated topology."""
+    g, tg = _case(31)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+    sched = Scheduler(tg, policy=policy)
+    plan = sched.submit(g)
+    upd = sched.update(link_speed={"l3": 1.5})
+    assert upd.replay.suffix_start == 0
+    assert sched.topology.link_speed["l3"] == 1.5
+    fresh = Scheduler(sched.topology).submit(
+        upd.graph, dataclasses.replace(policy, period=plan.period))
+    assert_same_schedule(upd.schedule, fresh.schedule)
+
+
+def test_update_unknown_link_and_missing_submit_raise():
+    g, tg = _case(41)
+    sched = Scheduler(tg)
+    with pytest.raises(ValueError, match="before any submit"):
+        sched.update(task_rates={0: 2.0})
+    sched.submit(g)
+    with pytest.raises(ValueError, match="unknown links"):
+        sched.update(link_speed={"nope": 1.0})
+
+
+def test_update_noop_returns_cached_plan():
+    g, tg = _case(51)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    plan = sched.submit(g)
+    again = sched.update(task_rates={3: 1.0})     # factor 1.0 == no drift
+    assert again is plan
+
+
+def test_update_hsv_policy():
+    """The single-pass baseline policy replays too (no sweep)."""
+    g, tg = _case(61)
+    sched = Scheduler(tg, policy=HSV_CC())
+    plan = sched.submit(g)
+    task = int(np.argmax(plan.schedule.start))
+    upd = sched.update(task_rates={task: 0.8})
+    fresh = Scheduler(tg, policy=HSV_CC()).submit(upd.graph)
+    assert_same_schedule(upd.schedule, fresh.schedule)
+
+
+def test_update_reference_engine_full_replan():
+    """The reference engine has no traces: update falls back to a full
+    re-plan but stays output-identical to the compiled path."""
+    g, tg = _case(71)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    ref = Scheduler(tg, policy=policy, engine="reference")
+    ref_plan = ref.submit(g)
+    com = Scheduler(tg, policy=policy)
+    com.submit(g)
+    task = int(np.argmax(ref_plan.schedule.start))
+    ur = ref.update(task_rates={task: 1.4})
+    uc = com.update(task_rates={task: 1.4})
+    assert ur.replay.suffix_start == 0 and ur.replay.decisions_replayed == 0
+    assert_same_schedule(ur.schedule, uc.schedule)
+
+
+# -------------------------------------------------------- submit_many
+def test_submit_many_matches_manual_union_and_slices_validate():
+    rng = np.random.default_rng(9)
+    tg = paper_topology()
+    graphs = [random_spg(int(rng.integers(8, 20)), rng, ccr=1.0, tg=tg,
+                         outdeg_constraint=True) for _ in range(5)]
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+    fleet = Scheduler(tg, policy=policy).submit_many(graphs)
+    # one engine pass over the disjoint union, shared link state
+    union, offsets = _disjoint_union(graphs, tg)
+    manual = Scheduler(tg, policy=policy).submit(union)
+    assert fleet.offsets == offsets
+    assert_same_schedule(fleet.schedule, manual.schedule)
+    for k, g in enumerate(graphs):
+        sub = fleet.subschedule(k)
+        assert sub.graph is g
+        sub.validate()                      # per-graph view is consistent
+        np.testing.assert_array_equal(
+            sub.proc, fleet.schedule.proc[offsets[k]:offsets[k] + g.n])
+
+
+def test_submit_many_then_incremental_update():
+    """The union session supports drift updates keyed by union node ids."""
+    rng = np.random.default_rng(19)
+    tg = paper_topology()
+    graphs = [random_spg(14, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+              for _ in range(4)]
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    sched = Scheduler(tg, policy=policy)
+    fleet = sched.submit_many(graphs)
+    node = fleet.offsets[3] + 2
+    upd = sched.update(task_rates={node: 0.75})
+    fresh = Scheduler(tg).submit(
+        upd.graph, dataclasses.replace(
+            policy, period=sched._last.periods[policy]))
+    assert_same_schedule(upd.schedule, fresh.schedule)
+
+
+def test_submit_many_rejects_mixed_tpl_conventions():
+    tg = paper_topology()
+    g1 = paper_spg(ccr=1.0)
+    g2 = paper_spg(ccr=2.0)
+    with pytest.raises(ValueError, match="tpl convention"):
+        Scheduler(tg).submit_many([g1, g2])
+    with pytest.raises(ValueError, match="at least one graph"):
+        Scheduler(tg).submit_many([])
+
+
+# ----------------------------------------------------- policies/results
+def test_sweepresult_array_accessors():
+    g, tg = paper_spg(), paper_topology()
+    plan = Scheduler(tg).submit(g, HVLB_CC_A(alpha_max=2.0, alpha_step=0.1,
+                                             period=150.0))
+    sw = plan.sweep
+    assert sw.alphas.shape == sw.makespans.shape == (21,)
+    assert sw.alphas[0] == 0.0 and sw.alphas[-1] == pytest.approx(2.0)
+    assert sw.makespans.min() == pytest.approx(sw.best.makespan)
+    np.testing.assert_array_equal(sw.alphas, [a for a, _ in sw.curve])
+
+
+def test_ic_policy_attaches_holes_and_precision():
+    g, tg = paper_spg(), paper_topology()
+    plan = Scheduler(tg).submit(g, HVLB_CC_IC(alpha_max=3.0, period=150.0))
+    assert plan.holes, "IC plan must carry schedule holes"
+    # exit tasks with nothing after them report unbounded holes
+    unbounded = [t for t, h in plan.holes.items() if np.isinf(h)]
+    for t in unbounded:
+        assert not g.succ[t]
+        assert plan.precision(t, 2.0) == 1.0       # optional part always fits
+    # a finite-holed task degrades once demand exceeds the hole
+    finite = [t for t, h in plan.holes.items() if np.isfinite(h)]
+    assert finite
+    t = finite[0]
+    assert plan.precision(t, 1.0) == 1.0
+    assert 0.0 < plan.precision(t, 100.0) < 1.0
+    # non-IC plans refuse the accessor
+    b = Scheduler(tg).submit(g, HVLB_CC_B(alpha_max=1.0, period=150.0))
+    assert b.holes is None
+    with pytest.raises(ValueError, match="HVLB_CC_IC"):
+        b.precision(0, 1.5)
+
+
+def test_policies_are_hashable_cache_keys():
+    g, tg = paper_spg(), paper_topology()
+    sched = Scheduler(tg)
+    p1 = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5, period=150.0)
+    p2 = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5, period=150.0)
+    plan1 = sched.submit(g, p1)
+    plan2 = sched.submit(g, p2)          # equal policy -> cached plan
+    assert plan1 is plan2
+    assert sched.submit(g, HSV_CC()) is not plan1
+
+
+def test_scheduler_validates_knobs():
+    g, tg = paper_spg(), paper_topology()
+    with pytest.raises(ValueError, match="unknown engine"):
+        Scheduler(tg, engine="jit")
+    with pytest.raises(ValueError, match="unknown sweep"):
+        Scheduler(tg).submit(g, HVLB_CC_B(sweep="random"))
+    with pytest.raises(ValueError, match="requires"):
+        Scheduler(tg, engine="reference").submit(
+            g, HVLB_CC_B(sweep="adaptive"))
+
+
+# --------------------------------------------------- serving integration
+def test_dsms_engine_lazy_replan_counts():
+    """Regression for the O(Q) replan bug: registering Q queries costs one
+    re-plan (on first use), not Q."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced_config
+    from repro.models.params import init_params
+    from repro.serve import DSMSEngine, Query
+
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = DSMSEngine(cfg, params, batch_size=2, max_seq=8)
+    for k in range(3):
+        eng.register(Query(f"q{k}", mandatory=lambda lg: jnp.max(lg, -1)))
+    assert eng.replans == 0 and eng.plan is None
+    eng.ensure_plan()
+    assert eng.replans == 1
+    eng.ensure_plan()                       # clean -> no extra replan
+    assert eng.replans == 1
+    # query operator nodes come from the graph's own mapping
+    g = eng._graph
+    assert set(eng._query_nodes.values()) == \
+        {g.query_ops[qi][0] for qi in range(3)}
+    assert all(g.pred[n] for n in eng._query_nodes.values())
+    eng.register(Query("late", mandatory=lambda lg: jnp.min(lg, -1)))
+    assert eng.replans == 1                 # still lazy
+    res = eng.step(np.zeros(2, np.int64))   # first step triggers replan
+    assert eng.replans == 2
+    assert set(res.query_outputs) == {"q0", "q1", "q2", "late"}
