@@ -9,7 +9,7 @@ the HVLB rows reuse it — the session API's intended cost profile.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, Scheduler, paper_spg,
                         paper_topology)
@@ -17,10 +17,12 @@ from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, Scheduler, paper_spg,
 from .common import row, timed
 
 
-def run(full: bool = False, engine: str = "compiled") -> List[str]:
+def run(full: bool = False, engine: str = "compiled",
+        backend: Optional[str] = None) -> List[str]:
     rows: List[str] = []
     g, tg = paper_spg(), paper_topology()
-    sched = Scheduler(tg, engine=engine)     # one session, shared instance
+    sched = Scheduler(tg, engine=engine,     # one session, shared instance
+                  backend=backend)
     plan, us = timed(sched.submit, g, HSV_CC())
     rows.append(row("exp0.hsv_cc.makespan", us, plan.makespan))
     for variant, policy in (("A", HVLB_CC_A(alpha_max=3.0, period=150.0)),

@@ -21,7 +21,7 @@ the graphs and runs one shared-link-state pass over the union.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -30,7 +30,8 @@ from repro.core import HVLB_CC_B, Scheduler, paper_topology, random_spg
 from .common import row, timed
 
 
-def run(full: bool = False, engine: str = "compiled") -> List[str]:
+def run(full: bool = False, engine: str = "compiled",
+        backend: Optional[str] = None) -> List[str]:
     rows: List[str] = []
     tg = paper_topology()
 
@@ -39,7 +40,7 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
     rng = np.random.default_rng(8000)
     g = random_spg(n, rng, ccr=1.0, tg=tg, max_in=3, max_out=6)
     policy = HVLB_CC_B(alpha_max=2.0, alpha_step=0.05)
-    sched = Scheduler(tg, policy=policy, engine=engine)
+    sched = Scheduler(tg, policy=policy, engine=engine, backend=backend)
     plan, submit_us = timed(sched.submit, g)
     rows.append(row("exp8.update.submit_us", submit_us, plan.makespan))
 
@@ -49,12 +50,13 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
                key=lambda t: sched.probe_update(task_rates={t: 0.9}))
     upd_us = full_us = float("inf")
     for _ in range(5 if full else 3):
-        sched_k = Scheduler(tg, policy=policy, engine=engine)
+        sched_k = Scheduler(tg, policy=policy, engine=engine,
+                            backend=backend)
         plan_k = sched_k.submit(g)
         upd, us = timed(sched_k.update, task_rates={task: 0.9})
         upd_us = min(upd_us, us)
         fresh_sched = Scheduler(tg, policy=dataclasses.replace(
-            policy, period=plan_k.period), engine=engine)
+            policy, period=plan_k.period), engine=engine, backend=backend)
         fresh, us = timed(fresh_sched.submit, upd.graph)
         full_us = min(full_us, us)
         assert np.array_equal(upd.schedule.finish, fresh.schedule.finish)
@@ -77,15 +79,16 @@ def run(full: bool = False, engine: str = "compiled") -> List[str]:
     fleet_policy = HVLB_CC_B(alpha_max=0.0, alpha_step=0.05)
 
     def per_graph():
-        sched_pg = Scheduler(tg, policy=fleet_policy, engine=engine)
+        sched_pg = Scheduler(tg, policy=fleet_policy, engine=engine,
+                             backend=backend)
         return [sched_pg.submit(gk) for gk in graphs]
 
     per_us = many_us = float("inf")
     for _ in range(5 if full else 3):
         plans, us = timed(per_graph)
         per_us = min(per_us, us)
-        fleet, us = timed(Scheduler(tg, policy=fleet_policy,
-                                    engine=engine).submit_many, graphs)
+        fleet, us = timed(Scheduler(tg, policy=fleet_policy, engine=engine,
+                                    backend=backend).submit_many, graphs)
         many_us = min(many_us, us)
     for k in range(n_fleet):
         fleet.subschedule(k)                 # slices stay addressable

@@ -2,14 +2,18 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,exp3]
                                  [--engine compiled|reference]
+                                 [--backend auto|scalar|vector]
                                  [--json [PATH]]
 
 Emits ``name,us_per_call,derived`` CSV on stdout.  ``--full`` uses the
 paper's sample sizes (100 graphs/point, 1000 DAGs for SFR, alpha to 20).
-``--json`` additionally writes a machine-readable snapshot (default
-``BENCH_sched.json``) with every row plus an engine-vs-reference speedup
-probe on the exp1 alpha-sweep workload (n=50, alpha_max=5, step=0.05) so
-the perf trajectory is tracked across PRs.
+``--backend`` selects the compiled engine's candidate-evaluation backend
+for experiments that accept it (exp7 additionally times the scalar and
+vector backends against each other regardless).  ``--json`` additionally
+writes a machine-readable snapshot (default ``BENCH_sched.json``) with
+every row plus an engine-vs-reference speedup probe on the exp1
+alpha-sweep workload (n=50, alpha_max=5, step=0.05) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -34,7 +38,7 @@ MODULES = [
 ]
 
 
-def engine_speedup_probe(n_graphs: int = 3) -> dict:
+def engine_speedup_probe(n_graphs: int = 3, backend=None) -> dict:
     """Time the exp1 alpha-sweep workload (n=50, alpha_max=5, step=0.05)
     on the reference and compiled paths and assert identical results."""
     import numpy as np
@@ -50,9 +54,12 @@ def engine_speedup_probe(n_graphs: int = 3) -> dict:
         t0 = time.perf_counter()
         ref = Scheduler(tg, policy=policy, engine="reference").submit(g).sweep
         t1 = time.perf_counter()
-        eng = Scheduler(tg, policy=policy, engine="compiled").submit(g).sweep
+        eng = Scheduler(tg, policy=policy, engine="compiled",
+                        backend=backend).submit(g).sweep
         t2 = time.perf_counter()
-        assert ref.curve == eng.curve and ref.best_alpha == eng.best_alpha
+        assert np.array_equal(ref.alphas, eng.alphas)
+        assert np.array_equal(ref.makespans, eng.makespans)
+        assert ref.best_alpha == eng.best_alpha
         assert np.array_equal(ref.best.finish, eng.best.finish)
         ref_us += (t1 - t0) * 1e6
         eng_us += (t2 - t1) * 1e6
@@ -73,6 +80,10 @@ def main() -> None:
     ap.add_argument("--engine", type=str, default="compiled",
                     choices=["compiled", "reference"],
                     help="scheduler implementation for the experiments")
+    ap.add_argument("--backend", type=str, default=None,
+                    choices=["auto", "scalar", "vector"],
+                    help="candidate-evaluation backend for the compiled "
+                         "engine (default: auto / $REPRO_SCHED_BACKEND)")
     ap.add_argument("--json", type=str, nargs="?", const="BENCH_sched.json",
                     default=None, metavar="PATH",
                     help="also write a JSON snapshot (incl. the "
@@ -91,8 +102,11 @@ def main() -> None:
             print(f"# skipped {mod_name}: {e}", file=sys.stderr)
             continue
         kwargs = {"full": args.full}
-        if "engine" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if "engine" in params:
             kwargs["engine"] = args.engine
+        if "backend" in params:
+            kwargs["backend"] = args.backend
         for r in mod.run(**kwargs):
             all_rows.append(r)
             print(r)
@@ -109,8 +123,10 @@ def main() -> None:
                          "derived": derived})
         snapshot = {
             "engine": args.engine,
+            "backend": args.backend,
             "full": args.full,
-            "engine_vs_reference": engine_speedup_probe(),
+            "engine_vs_reference": engine_speedup_probe(
+                backend=args.backend),
             "rows": rows,
         }
         with open(args.json, "w") as f:

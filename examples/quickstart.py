@@ -7,10 +7,13 @@ from repro.core import (HSV_CC, HVLB_CC_B, HVLB_CC_IC, Scheduler, load_balance,
 
 # 1. The paper's worked example: Fig. 3 graph on the Fig. 2 network,
 #    submitted to a long-lived scheduler session (register once,
-#    execute continuously — the DSMS loop).
+#    execute continuously — the DSMS loop).  backend= selects the
+#    candidate-evaluation backend: "auto" (default) runs the scalar
+#    loop on small topologies and the (P,)-batch vector backend from
+#    P >= 8 — all backends are bit-identical, it is purely a speed knob.
 g = paper_spg()
 tg = paper_topology()
-sched = Scheduler(tg)                       # one session, shared compile
+sched = Scheduler(tg, backend="auto")       # one session, shared compile
 
 # 2. Baseline HSV_CC (Xie et al.) — tasks pile onto the fast processors.
 hsv = sched.submit(g, HSV_CC()).schedule
@@ -53,5 +56,11 @@ print(f"\nafter drift: makespan={upd.makespan:.1f}; probe said "
       f"{surviving}/{g.n} decisions survive, update replayed "
       f"{upd.replay.decisions_replayed} and re-simulated "
       f"{upd.replay.decisions_simulated}")
+
+# 6. Wide clusters: on P >= 8 processors "auto" resolves to the
+#    vectorized backend; the plan records which numeric layer ran.
+#    An explicit override is per-call: sched.submit(g, backend="scalar").
+print(f"\nbackend on this 3-processor example: {upd.backend} "
+      "(vector kicks in from P >= 8)")
 
 print("\n(paper: HSV_CC=73, HVLB_CC=62 — see tests/test_paper_example.py)")

@@ -3,6 +3,9 @@ scheduling for stream-processing DAGs on heterogeneous processors/networks.
 """
 from .api import (HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC, FleetPlan,
                   Plan, Policy, ReplayStats, Scheduler, SweepResult)
+from .backends import (CandidateEvaluator, ScalarBackend, VectorBackend,
+                       available_backends, default_backend,
+                       resolve_backend_name)
 from .engine import CompiledInstance, DecisionTrace
 from .graph import PAPER_COMP, PAPER_COMP_EXP5, PAPER_EDGES, SPG, paper_spg
 from .hsv_cc import schedule_hsv_cc
@@ -20,6 +23,9 @@ __all__ = [
     "Scheduler", "Plan", "FleetPlan", "Policy", "ReplayStats",
     "HSV_CC", "HVLB_CC_A", "HVLB_CC_B", "HVLB_CC_IC", "SweepResult",
     "CompiledInstance", "DecisionTrace",
+    # candidate-evaluation backends
+    "CandidateEvaluator", "ScalarBackend", "VectorBackend",
+    "available_backends", "default_backend", "resolve_backend_name",
     "SPG", "paper_spg", "PAPER_EDGES", "PAPER_COMP", "PAPER_COMP_EXP5",
     "Topology", "paper_topology", "fully_switched_topology",
     "rank_matrix", "hrank", "hprv_a", "hprv_b", "ldet_cc", "priority_queue",

@@ -33,6 +33,13 @@ computation model as a first-class policy whose :class:`Plan` carries
 schedule holes and precision accessors instead of requiring post-hoc
 helper calls.
 
+Every schedule ultimately runs on a *candidate-evaluation backend*
+(:mod:`repro.core.backends`): ``backend="auto"`` (default) picks the
+(P,)-batch vector backend on wide topologies and the scalar reference
+loop otherwise — all backends are bit-identical, so the knob (session
+constructor, per-call override, or the ``REPRO_SCHED_BACKEND``
+environment variable) is purely about speed.
+
 The pre-existing one-shot functions (``schedule_hsv_cc``,
 ``schedule_hvlb_cc``, ``schedule_hvlb_cc_best``) remain as thin
 deprecation shims over this module with bit-identical outputs
@@ -46,6 +53,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .backends import resolve_backend_name
+from .deprecation import warn_once
 from .engine import CompiledInstance, DecisionTrace
 from .graph import SPG
 from .imprecise import precision as _precision
@@ -113,21 +122,33 @@ Policy = Union[HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC]
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class SweepResult:
-    """Alpha-sweep outcome (Fig. 5 data)."""
+    """Alpha-sweep outcome (Fig. 5 data), as plotting-ready arrays.
+
+    ``alphas[k]`` / ``makespans[k]`` are the grid point and its makespan.
+    The legacy list-of-tuples representation survives only as the
+    deprecated :attr:`curve` property.
+    """
 
     best: Schedule
     best_alpha: float
-    curve: List[Tuple[float, float]]     # (alpha, makespan) per grid point
+    alphas: np.ndarray                   # (k,) grid alphas
+    makespans: np.ndarray                # (k,) makespan per grid alpha
+
+    @classmethod
+    def from_points(cls, best: Schedule, best_alpha: float,
+                    points: List[Tuple[float, float]]) -> "SweepResult":
+        """Build from the sweep loops' (alpha, makespan) accumulator."""
+        return cls(best, best_alpha,
+                   np.array([a for a, _ in points], dtype=float),
+                   np.array([m for _, m in points], dtype=float))
 
     @property
-    def alphas(self) -> np.ndarray:
-        """Grid alphas as a ``(k,)`` array (plotting-ready)."""
-        return np.array([a for a, _ in self.curve], dtype=float)
-
-    @property
-    def makespans(self) -> np.ndarray:
-        """Makespan per grid alpha as a ``(k,)`` array."""
-        return np.array([m for _, m in self.curve], dtype=float)
+    def curve(self) -> List[Tuple[float, float]]:
+        """Deprecated list-of-tuples view; use ``alphas``/``makespans``."""
+        warn_once("SweepResult.curve",
+                  "SweepResult.curve is deprecated; use the "
+                  "SweepResult.alphas / SweepResult.makespans arrays")
+        return list(zip(self.alphas.tolist(), self.makespans.tolist()))
 
 
 @dataclasses.dataclass
@@ -152,6 +173,7 @@ class Plan:
     sweep: Optional[SweepResult] = None
     holes: Optional[Dict[int, float]] = None     # HVLB_CC_IC only
     replay: Optional[ReplayStats] = None
+    backend: Optional[str] = None    # resolved evaluator ("reference": None)
 
     @property
     def makespan(self) -> float:
@@ -194,6 +216,7 @@ class FleetPlan:
     policy: Policy
     period: Optional[float]
     sweep: Optional[SweepResult] = None
+    backend: Optional[str] = None
 
     @property
     def makespan(self) -> float:
@@ -243,8 +266,11 @@ class _GraphSession:
         self.ldet = ldet_cc(g, tg, self.rank)
         self.queues: Dict[tuple, List[int]] = {}
         self.periods: Dict[Policy, float] = {}
+        # traces are shared across backends (records are backend-portable
+        # and bit-identical); plans are keyed by (policy, backend) so a
+        # per-call backend override never hands back a stale plan object
         self.traces: Dict[Policy, Dict[float, DecisionTrace]] = {}
-        self.plans: Dict[Policy, Plan] = {}
+        self.plans: Dict[Tuple[Policy, Optional[str]], Plan] = {}
 
     @property
     def inst(self) -> Optional[CompiledInstance]:
@@ -329,42 +355,67 @@ class Scheduler:
     ``engine="reference"`` re-runs the readable ``list_schedule`` per
     grid point (bit-identical results, no incremental replay — updates
     fall back to a full re-plan).
+
+    ``backend`` selects the compiled engine's candidate-evaluation
+    backend (:mod:`repro.core.backends`): ``"scalar"``, ``"vector"``, or
+    ``"auto"`` (the default — vector from P >= 8; overridable per
+    process via the ``REPRO_SCHED_BACKEND`` environment variable).  All
+    backends are bit-identical, so this is purely a performance knob;
+    ``submit``/``submit_many``/``update`` accept a per-call override.
     """
 
     def __init__(self, topology: Topology, policy: Optional[Policy] = None,
-                 engine: str = "compiled") -> None:
+                 engine: str = "compiled",
+                 backend: Optional[str] = None) -> None:
         if engine not in ("compiled", "reference"):
             raise ValueError(f"unknown engine {engine!r}")
         self.topology = topology
         self.policy: Policy = HVLB_CC_B() if policy is None else policy
         self.engine = engine
+        self.backend = backend
         self._sessions: Dict[int, _GraphSession] = {}
         self._last: Optional[_GraphSession] = None
         # probe_update's dry-run state, reused by a matching update()
         self._probe: Optional[tuple] = None
 
+    def _resolve_backend(self, backend: Optional[str]) -> Optional[str]:
+        """Concrete evaluator name for this call (None for reference).
+
+        The name is validated even under the reference engine, so a
+        typo'd ``backend=`` fails loudly instead of being silently
+        ignored until the session switches to the compiled engine.
+        """
+        name = resolve_backend_name(
+            self.backend if backend is None else backend,
+            self.topology.n_procs, self.topology)
+        return name if self.engine == "compiled" else None
+
     # ------------------------------------------------------------- submit
-    def submit(self, g: SPG, policy: Optional[Policy] = None) -> Plan:
+    def submit(self, g: SPG, policy: Optional[Policy] = None,
+               backend: Optional[str] = None) -> Plan:
         """Compile (once) and schedule ``g`` under ``policy``.
 
         Re-submitting the same graph object reuses its compiled instance,
-        priority queues, and — for an unchanged policy — the cached plan.
+        priority queues, and — for an unchanged (policy, backend) — the
+        cached plan.
         """
         policy = self.policy if policy is None else policy
+        bname = self._resolve_backend(backend)
         sess = self._sessions.get(id(g))
         if sess is None or sess.g is not g:
             sess = _GraphSession(g, self.topology,
                                  compiled=self.engine == "compiled")
             self._sessions[id(g)] = sess
         self._last = sess
-        plan = sess.plans.get(policy)
+        plan = sess.plans.get((policy, bname))
         if plan is None:
-            plan = self._plan(sess, policy)
-            sess.plans[policy] = plan
+            plan = self._plan(sess, policy, backend=bname)
+            sess.plans[(policy, bname)] = plan
         return plan
 
     def submit_many(self, graphs: Iterable[SPG],
-                    policy: Optional[Policy] = None) -> FleetPlan:
+                    policy: Optional[Policy] = None,
+                    backend: Optional[str] = None) -> FleetPlan:
         """Schedule several independent SPGs against shared link state in
         one engine pass (the exp6 fleet scenario).
 
@@ -381,10 +432,11 @@ class Scheduler:
             raise ValueError("submit_many needs at least one graph")
         policy = self.policy if policy is None else policy
         union, offsets = _disjoint_union(graphs, self.topology)
-        plan = self.submit(union, policy)
+        plan = self.submit(union, policy, backend=backend)
         return FleetPlan(schedule=plan.schedule, graphs=graphs,
                          offsets=offsets, policy=policy,
-                         period=plan.period, sweep=plan.sweep)
+                         period=plan.period, sweep=plan.sweep,
+                         backend=plan.backend)
 
     # ------------------------------------------------------------- update
     def probe_update(self, *, task_rates: Dict[int, float],
@@ -419,7 +471,8 @@ class Scheduler:
     def update(self, *, task_rates: Optional[Dict[int, float]] = None,
                link_speed: Optional[Dict[str, float]] = None,
                graph: Optional[SPG] = None,
-               policy: Optional[Policy] = None) -> Plan:
+               policy: Optional[Policy] = None,
+               backend: Optional[str] = None) -> Plan:
         """Re-plan after drift, replaying only the affected trace suffix.
 
         ``task_rates`` maps task -> arrival-rate factor on its
@@ -456,7 +509,7 @@ class Scheduler:
         if not changed and not link_changed:
             self._sessions[id(sess.g)] = sess
             self._last = sess
-            return self.submit(sess.g, policy)
+            return self.submit(sess.g, policy, backend=backend)
 
         probe = self._probe
         self._probe = None
@@ -477,9 +530,10 @@ class Scheduler:
         if suffix_start > 0:
             prev_traces = sess.traces.get(policy)
 
+        bname = self._resolve_backend(backend)
         plan = self._plan(new_sess, policy, prev_traces=prev_traces,
-                          suffix_start=suffix_start)
-        new_sess.plans[policy] = plan
+                          suffix_start=suffix_start, backend=bname)
+        new_sess.plans[(policy, bname)] = plan
         # the originally submitted handle and the new graph both address
         # this session; every map entry still pointing at the superseded
         # session is evicted (else each update would leak one session)
@@ -538,7 +592,8 @@ class Scheduler:
     # -------------------------------------------------------------- plan
     def _plan(self, sess: _GraphSession, policy: Policy,
               prev_traces: Optional[Dict[float, DecisionTrace]] = None,
-              suffix_start: int = 0) -> Plan:
+              suffix_start: int = 0,
+              backend: Optional[str] = None) -> Plan:
         g = sess.g
         queue = sess.queue_for(self.topology, policy)
         inst = sess.inst
@@ -563,7 +618,7 @@ class Scheduler:
                 pos = suffix_start if prev is not None else 0
                 best, _, tr = inst.schedule_traced(
                     queue, 0.0, period=period, want_bound=False,
-                    resume=prev, resume_pos=pos)
+                    resume=prev, resume_pos=pos, backend=backend)
                 sess.traces[policy] = {0.0: tr}
                 sims_resumed, sims_full = (1, 0) if pos else (0, 1)
                 sweep = None
@@ -580,12 +635,12 @@ class Scheduler:
                 sess.periods[policy] = period
             if inst is None:
                 sweep = self._sweep_reference(sess, queue, policy, period)
-                sims_full = len(sweep.curve)
+                sims_full = len(sweep.alphas)
             else:
                 traces: Dict[float, DecisionTrace] = {}
                 sweep, sims_resumed, sims_full = self._sweep_compiled(
                     inst, queue, policy, period, traces,
-                    prev_traces, suffix_start)
+                    prev_traces, suffix_start, backend)
                 sess.traces[policy] = traces
             best = sweep.best
 
@@ -599,14 +654,16 @@ class Scheduler:
         holes = schedule_holes(best, include_unbounded=True) \
             if isinstance(policy, HVLB_CC_IC) else None
         return Plan(schedule=best, policy=policy, graph=g, period=period,
-                    sweep=sweep, holes=holes, replay=replay)
+                    sweep=sweep, holes=holes, replay=replay,
+                    backend=backend)
 
     # ------------------------------------------------------------- sweeps
     def _sweep_compiled(self, inst: CompiledInstance, queue: Sequence[int],
                         policy: HVLB_CC_A, period: float,
                         traces: Dict[float, DecisionTrace],
                         prev_traces: Optional[Dict[float, DecisionTrace]],
-                        suffix_start: int
+                        suffix_start: int,
+                        backend: Optional[str] = None
                         ) -> Tuple[SweepResult, int, int]:
         n_steps = int(round(policy.alpha_max / policy.alpha_step))
         counters = [0, 0]                      # [resumed, full]
@@ -621,12 +678,13 @@ class Scheduler:
             pos = suffix_start if prev is not None else 0
             s, _, tr = inst.schedule_traced(queue, 0.0, period=period,
                                             want_bound=False,
-                                            resume=prev, resume_pos=pos)
+                                            resume=prev, resume_pos=pos,
+                                            backend=backend)
             traces[0.0] = tr
-            return (SweepResult(s, 0.0, [(0.0, s.makespan)]),
+            return (SweepResult.from_points(s, 0.0, [(0.0, s.makespan)]),
                     1 if pos else 0, 0 if pos else 1)
 
-        def grid_pass(alphas: Sequence[float], curve, best, best_alpha):
+        def grid_pass(alphas: Sequence[float], points, best, best_alpha):
             k = 0
             while k < len(alphas):
                 alpha = alphas[k]
@@ -635,44 +693,44 @@ class Scheduler:
                 counters[0 if pos else 1] += 1
                 s, bnd, tr = inst.schedule_traced(
                     queue, alpha, period=period, want_bound=True,
-                    resume=prev, resume_pos=pos)
+                    resume=prev, resume_pos=pos, backend=backend)
                 traces[alpha] = tr
-                curve.append((alpha, s.makespan))
+                points.append((alpha, s.makespan))
                 if best is None or s.makespan < best.makespan - 1e-12:
                     best, best_alpha = s, alpha
                 k += 1
                 # identical decision trace => identical schedule
                 while k < len(alphas) and alphas[k] < bnd - _SKIP_MARGIN:
-                    curve.append((alphas[k], s.makespan))
+                    points.append((alphas[k], s.makespan))
                     k += 1
             return best, best_alpha
 
-        curve: List[Tuple[float, float]] = []
+        points: List[Tuple[float, float]] = []
         if policy.sweep == "grid":
             alphas = [k * policy.alpha_step for k in range(n_steps + 1)]
-            best, best_alpha = grid_pass(alphas, curve, None, 0.0)
+            best, best_alpha = grid_pass(alphas, points, None, 0.0)
         else:                                  # adaptive coarse-to-fine
             step, cf = policy.alpha_step, max(1, policy.coarse_factor)
             coarse = [k * step for k in range(0, n_steps + 1, cf)]
             if coarse[-1] != n_steps * step:
                 coarse.append(n_steps * step)
-            best, best_alpha = grid_pass(coarse, curve, None, 0.0)
+            best, best_alpha = grid_pass(coarse, points, None, 0.0)
             assert best is not None
             # refine around every coarse point within 2% of the optimum
             cutoff = best.makespan * 1.02
             refine: set = set()
-            for a, m in curve:
+            for a, m in points:
                 if m <= cutoff:
                     ka = int(round(a / step))
                     refine.update(range(max(0, ka - cf),
                                         min(n_steps, ka + cf) + 1))
-            done = {round(a, 12) for a, _ in curve}
+            done = {round(a, 12) for a, _ in points}
             fine = [k * step for k in sorted(refine)
                     if round(k * step, 12) not in done]
-            best, best_alpha = grid_pass(fine, curve, best, best_alpha)
-            curve.sort()
+            best, best_alpha = grid_pass(fine, points, best, best_alpha)
+            points.sort()
         assert best is not None
-        return (SweepResult(best, best_alpha, curve),
+        return (SweepResult.from_points(best, best_alpha, points),
                 counters[0], counters[1])
 
     def _sweep_reference(self, sess: _GraphSession, queue: Sequence[int],
@@ -681,13 +739,13 @@ class Scheduler:
         n_steps = int(round(policy.alpha_max / policy.alpha_step))
         best: Optional[Schedule] = None
         best_alpha = 0.0
-        curve: List[Tuple[float, float]] = []
+        points: List[Tuple[float, float]] = []
         for k in range(n_steps + 1):
             alpha = k * policy.alpha_step
             s = list_schedule(g, tg, queue, sess.rank, alpha=alpha,
                               period=period, ldet=sess.ldet)
-            curve.append((alpha, s.makespan))
+            points.append((alpha, s.makespan))
             if best is None or s.makespan < best.makespan - 1e-12:
                 best, best_alpha = s, alpha
         assert best is not None
-        return SweepResult(best, best_alpha, curve)
+        return SweepResult.from_points(best, best_alpha, points)

@@ -1,0 +1,94 @@
+"""Pluggable candidate-evaluation backends for the compiled engine.
+
+The engine's decision layer (queue walk, trace memoization, schedule
+assembly) is numeric-backend agnostic; the per-task candidate evaluation
+over all P processors is a :class:`CandidateEvaluator`:
+
+  * ``"scalar"`` — :class:`ScalarBackend`, the flat-list loop extracted
+    from the PR-1 engine; the bit-exactness reference.
+  * ``"vector"`` — :class:`VectorBackend`, (P,)-batch NumPy array ops;
+    bit-identical to scalar, faster from P >= ~8.
+  * ``"auto"``  — resolves per instance: vector when ``P >= 8`` and the
+    topology is vector-compatible, scalar otherwise.
+
+The environment variable ``REPRO_SCHED_BACKEND`` overrides the *default*
+(used when a caller passes ``backend=None``); explicit ``backend=``
+arguments always win.  CI runs the tier-1 suite under both backends via
+this variable.
+
+Adding a backend is one file: subclass :class:`CandidateEvaluator`,
+implement ``_alloc``/``evaluate``, and register the class here — policy
+code, the session API, traces, and the benchmarks pick it up through the
+``backend=`` string.  This is the extension point for an accelerator
+(JAX/Pallas) batch backend.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Type
+
+from .base import CandidateEvaluator, Decision
+from .scalar import ScalarBackend
+from .vector import BackendCompatError, VectorBackend
+
+__all__ = [
+    "CandidateEvaluator", "Decision", "ScalarBackend", "VectorBackend",
+    "BackendCompatError", "BACKENDS", "AUTO_VECTOR_MIN_P",
+    "available_backends", "default_backend", "resolve_backend_name",
+    "vector_compatible",
+]
+
+BACKENDS: Dict[str, Type[CandidateEvaluator]] = {
+    ScalarBackend.name: ScalarBackend,
+    VectorBackend.name: VectorBackend,
+}
+
+# "auto" switches to the batched backend where the (P,)-vector ops
+# amortize their per-call overhead (measured in benchmarks/exp7).
+AUTO_VECTOR_MIN_P = 8
+
+_ENV_VAR = "REPRO_SCHED_BACKEND"
+
+
+def available_backends() -> list:
+    return sorted(BACKENDS)
+
+
+def default_backend() -> str:
+    """The session default: ``REPRO_SCHED_BACKEND`` or ``"auto"``."""
+    return os.environ.get(_ENV_VAR, "auto")
+
+
+def vector_compatible(tg) -> bool:
+    """Vector batching needs link-disjoint routes (see VectorBackend).
+
+    Pure function of the (frozen-by-convention) route tables, memoized
+    on the topology: auto-resolution runs per submit/update and must not
+    re-scan O(routes) each time.
+    """
+    ok = getattr(tg, "_vector_compat", None)
+    if ok is None:
+        ok = all(len(set(r)) == len(r)
+                 for rr in tg.routes.values() for r in rr)
+        tg._vector_compat = ok
+    return ok
+
+
+def resolve_backend_name(backend: Optional[str], P: int, tg) -> str:
+    """Resolve a requested backend to a concrete registered name.
+
+    ``None`` means "the default" (env override or auto); ``"auto"``
+    picks vector for ``P >= AUTO_VECTOR_MIN_P`` on vector-compatible
+    topologies.  Explicit names are validated (an explicit ``"vector"``
+    on an incompatible topology raises when the backend is built).
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "auto":
+        if P >= AUTO_VECTOR_MIN_P and vector_compatible(tg):
+            return VectorBackend.name
+        return ScalarBackend.name
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; available: "
+                         f"{available_backends()} or 'auto'")
+    return backend

@@ -1,0 +1,132 @@
+"""Candidate-evaluation backend protocol (the numeric layer of the engine).
+
+:class:`~repro.core.engine.CompiledInstance` is split in two:
+
+  * the **decision layer** (``engine._run``) owns the priority-queue walk,
+    precedence checks, decision-trace recording/resume, and `Schedule`
+    assembly — pure Python, identical for every backend;
+  * the **numeric layer** (a :class:`CandidateEvaluator`) owns the
+    per-task candidate evaluation over all ``P`` processors — the
+    sequential message-routing walks (Eqs. 13-15), the batched EST/EFT
+    (Eqs. 10-12), the BP load-balance term (Def. 4.1), the selection
+    value (Def. 4.2), winner selection, and the alpha crossing bound.
+
+A backend owns the mutable run state: ``link_free`` (flat, link-id
+indexed — a Python list for the scalar backend, a ``(L,)`` ndarray for
+the vector backend), ``proc_free``, ``loads``, and the per-task
+``proc_of``/``ast``/``aft`` outputs.  Committing a decision
+(:meth:`apply`) is *shared* scalar code: a handful of per-hop max
+updates, identical floats in identical order no matter which backend
+produced the decision.  That is what makes decision traces portable — a
+trace recorded under one backend replays bit-identically under another.
+
+Invariant: every backend performs the same IEEE-754 operations as the
+reference ``list_schedule`` (reassociating only *exact* operations such
+as ``max``), so all backends are mutually **bit-identical**
+(``tests/test_backend_equivalence.py``).
+"""
+from __future__ import annotations
+
+import abc
+from typing import ClassVar, List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..engine import CompiledInstance
+
+_INF = float("inf")
+
+# What `evaluate` returns: the DecisionRecord tail plus the decision's
+# alpha crossing-bound contribution (inf when not tracking):
+#   (proc, est, eft, msgs, cand_A, cand_B, bound_contrib)
+# with ``msgs`` = [(pred, route, [(link_id, lst, lft), ...]), ...].
+Decision = Tuple[int, float, float, list, Optional[tuple], Optional[tuple],
+                 float]
+
+
+class CandidateEvaluator(abc.ABC):
+    """One candidate-evaluation backend bound to one compiled instance.
+
+    Lifecycle per ``_run``: ``start(alpha, period, want_bound)`` resets
+    the run state, then for every dequeued task either
+    ``evaluate(j)`` + ``apply(rec)`` (full candidate loop) or
+    ``apply(rec)`` alone (trace replay of a memoized decision).
+    """
+
+    name: ClassVar[str]
+
+    def __init__(self, inst: "CompiledInstance") -> None:
+        self.inst = inst
+
+    # -------------------------------------------------------------- run
+    def start(self, alpha: float, period: float, want_bound: bool) -> None:
+        inst = self.inst
+        self.alpha = alpha
+        self.period = period
+        self.want_bound = want_bound
+        self.proc_of: List[int] = [-1] * inst.n
+        self.ast: List[float] = [0.0] * inst.n
+        self.aft: List[float] = [0.0] * inst.n
+        self._alloc()
+
+    @abc.abstractmethod
+    def _alloc(self) -> None:
+        """Allocate/reset ``link_free``, ``proc_free``, ``loads`` in the
+        backend's preferred container (list vs ndarray)."""
+
+    @abc.abstractmethod
+    def evaluate(self, j: int) -> Decision:
+        """Evaluate all P placement candidates for task ``j`` against the
+        current run state and pick the winner (Eqs. 10-15, Defs. 4.1-4.2).
+        Does NOT mutate run state — the caller commits via :meth:`apply`.
+        """
+
+    # ------------------------------------------------------------ commit
+    def apply(self, j: int, p: int, est: float, eft: float,
+              msgs: list) -> None:
+        """Commit one decision (fresh or replayed from a trace).
+
+        Scalar on purpose: a committed decision touches only the winner's
+        row — a few floats — and sharing this code across backends is
+        what guarantees a trace replays bit-identically anywhere.
+        """
+        self.proc_of[j] = p
+        self.ast[j] = est
+        self.aft[j] = eft
+        self.proc_free[p] = eft
+        self.loads[p] += self.inst._comp[j][p]
+        link_free = self.link_free
+        for (_i, _route, iv) in msgs:
+            for (lid, _s, f) in iv:
+                if f > link_free[lid]:
+                    link_free[lid] = f
+
+    # ------------------------------------------------------------- bound
+    @staticmethod
+    def crossing(p: int, cand_A, cand_B, alpha: float) -> float:
+        """Supremum-alpha contribution of one decision (see DESIGN §3).
+
+        For winner ``p`` with per-candidate linear selection values
+        ``A_r + B_r * a``, returns the smallest rival crossing point
+        ``(A_r - A_p) / (B_p - B_r)`` — or ``alpha`` itself when a rival
+        is numerically indistinguishable — or ``inf`` when the winner
+        keeps winning forever.  Shared reference implementation used for
+        trace replay; backends may vectorize the live path as long as
+        they produce the identical float.
+        """
+        bound = _INF
+        a_c, b_c = cand_A[p], cand_B[p]
+        n = len(cand_A)
+        for r in range(n):
+            if r == p:
+                continue
+            d_b = b_c - cand_B[r]
+            d_a = cand_A[r] - a_c
+            scale = abs(a_c) + abs(cand_A[r]) + 1.0
+            if d_b > 1e-15 * scale:
+                a_star = d_a / d_b
+                if a_star < bound:
+                    bound = a_star
+            elif abs(d_b) <= 1e-15 * scale and abs(d_a) <= 1e-12 * scale:
+                if alpha < bound:
+                    bound = alpha
+        return bound

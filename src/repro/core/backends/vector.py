@@ -1,0 +1,356 @@
+"""Vectorized candidate-evaluation backend: (P,)-batch NumPy array ops.
+
+Evaluates all ``P`` placement candidates of one dequeued task at once.
+The per-candidate tentative link state lives in one flat ``(P*L + 2,)``
+buffer — lane ``p`` owns slots ``[p*L, (p+1)*L)``, a *sink* slot absorbs
+writes that the scalar path would not perform (same-processor
+predecessors, hop padding), and a read-only ``-inf`` slot feeds reads
+that must not constrain a start time.  Rollback is free: lanes never
+alias, and committing the winner is the shared scalar
+:meth:`~.base.CandidateEvaluator.apply`.
+
+The message-routing recurrences (Eqs. 13-14) are running maxima, and
+``max`` is associative/commutative and *exact* in IEEE-754, so
+
+    LST_h = max(aft_i, avail_0, ..., avail_h)
+    LFT_h = max(x_0, ..., x_h),  x_h = LST_h + CTML_h
+
+reassociate freely without changing a single bit; each hop is one
+``(P,)`` row op.  Committing a route needs no read-back either:
+``LFT_h >= avail_h`` (CTML >= 0), so the scalar path's ``if f > old``
+write is a plain scatter.  Every inexact operation (adds, multiplies,
+divides, comparisons) is performed elementwise in the reference's
+operand order, which is what keeps this backend bit-identical to
+:class:`~.scalar.ScalarBackend` (``tests/test_backend_equivalence.py``
+holds it to exact float equality on the full corpus).
+
+Per-lane BP terms are cached incrementally: ``loads[p]`` changes only
+when a decision commits, so ``apply`` refreshes ``loads[p]/period`` and
+``1 + (loads[p]/period)*alpha`` for the winner lane alone — the same
+scalars the reference recomputes per candidate.
+
+Dispatch-overhead notes (this is a small-array regime — P*H is tens of
+elements, so per-call overhead dominates): allocating ufunc forms beat
+``out=`` kwargs, ``.take``/fancy gathers beat ``np.take(out=)``, winner
+selection runs on ``.tolist()`` floats (exact — tolist round-trips the
+IEEE value), and single-predecessor tasks skip the lane-buffer
+broadcast entirely by gathering straight from the committed link state.
+
+Routes are padded per ``(pred, task, src)`` to hop-major tensors: hop
+padding reads ``-inf`` and adds ``-inf`` CTML (both maxima become
+no-ops), route padding is masked to ``+inf`` arrival so it never wins
+the (LFT, hops, index) route selection.  The ``src`` lane gets a fake
+zero-CTML route whose final LFT is exactly ``aft_i`` — the scalar
+path's same-processor arrival contribution — so no post-hoc masking is
+needed.
+
+Requires every route to visit each link at most once (true for every
+in-tree topology); otherwise :class:`BackendCompatError` is raised and
+``backend="auto"`` falls back to scalar.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .base import CandidateEvaluator, Decision
+
+_INF = float("inf")
+_NEG_INF = float("-inf")
+
+
+class BackendCompatError(ValueError):
+    """The instance's topology cannot be expressed by this backend."""
+
+
+class _VPlan:
+    """Padded route tensors for one (pred, task, src-processor) triple.
+
+    Single-route plans (R == 1) store hop-major rows: ``ct_rows[h]`` is
+    the ``(P,)`` CTML of hop ``h`` per destination lane, ``w_rows[h]``
+    the flat commit indices, ``av_idx``/``base_idx`` the gather indices
+    into the lane buffer / the committed link state.  Multi-route plans
+    carry ``(P, R, H)`` tensors and run a generic route-selection pass.
+    """
+
+    __slots__ = ("R", "H", "nhops", "invalid", "has_invalid", "route_meta",
+                 "ct_rows", "w_rows", "av_idx", "base_idx",
+                 "ct", "read_idx", "write_idx")
+
+    def __init__(self, read_idx, write_idx, base_idx, ct, nhops, invalid,
+                 route_meta):
+        P, self.R, self.H = read_idx.shape
+        self.nhops = nhops              # (P, R) real hop count per route
+        self.invalid = invalid          # (P, R) bool: route padding
+        self.has_invalid = bool(invalid.any())
+        self.route_meta = route_meta    # dst -> [(lids, route_names), ...]
+        if self.R == 1:
+            self.ct_rows = [np.ascontiguousarray(ct[:, 0, h])
+                            for h in range(self.H)]
+            self.w_rows = [np.ascontiguousarray(write_idx[:, 0, h])
+                           for h in range(self.H)]
+            self.av_idx = np.ascontiguousarray(read_idx[:, 0, :].T).ravel()
+            self.base_idx = np.ascontiguousarray(base_idx[:, 0, :].T).ravel()
+            self.ct = self.read_idx = self.write_idx = None
+        else:
+            self.ct = ct                # (P, R, H) CTML; padding -> -inf
+            self.read_idx = read_idx    # (P, R, H) intp into the buffer
+            self.write_idx = write_idx  # (P, R, H) intp; padding -> sink
+            self.ct_rows = self.w_rows = self.av_idx = self.base_idx = None
+
+
+class VectorBackend(CandidateEvaluator):
+    """(P,)-batch candidate evaluation on NumPy arrays."""
+
+    name = "vector"
+
+    def __init__(self, inst) -> None:
+        super().__init__(inst)
+        for pair, rr in inst._routes.items():
+            for (lids, _spds, _robj) in rr:
+                if len(set(lids)) != len(lids):
+                    raise BackendCompatError(
+                        f"route {pair} visits a link twice; the vector "
+                        "backend's batched scatter needs link-disjoint "
+                        "routes — use backend='scalar'")
+        P, L = inst.P, inst._n_links
+        self._L = L
+        self._sink = P * L
+        self._neg = P * L + 1
+        self._tent = np.empty(P * L + 2, dtype=np.float64)
+        self._tent2d = self._tent[:P * L].reshape(P, L)
+        self._tent[self._sink] = 0.0         # write-only garbage slot
+        self._tent[self._neg] = _NEG_INF     # read-only, never written
+        self._vplans: Dict[Tuple[int, int, int], _VPlan] = {}
+
+    def _alloc(self) -> None:
+        inst = self.inst
+        P, L = inst.P, self._L
+        # committed link state, with a trailing read-only -inf slot so
+        # single-pred gathers can use it directly (base_idx space)
+        self.link_free = np.zeros(L + 1, dtype=np.float64)
+        self.link_free[L] = _NEG_INF
+        self._lf = self.link_free[:L]
+        self.proc_free = np.zeros(P, dtype=np.float64)
+        self.loads = np.zeros(P, dtype=np.float64)
+        # incrementally maintained Def.-4.1 terms (see apply)
+        self._lop = np.zeros(P, dtype=np.float64)
+        self._bp = np.ones(P, dtype=np.float64)
+
+    def apply(self, j: int, p: int, est: float, eft: float,
+              msgs: list) -> None:
+        super().apply(j, p, est, eft, msgs)
+        # only the winner lane's load changed; refresh its BP terms with
+        # the exact scalar expressions the reference uses per candidate
+        lop = self.loads[p] / self.period
+        self._lop[p] = lop
+        self._bp[p] = 1.0 + lop * self.alpha
+
+    # ------------------------------------------------------------------
+    def _vplan(self, i: int, j: int, src: int) -> _VPlan:
+        inst = self.inst
+        P, L = inst.P, self._L
+        per_dst: List[list] = []
+        route_meta: List[list] = []
+        R = H = 1
+        for dst in range(P):
+            if dst == src:
+                per_dst.append([])
+                route_meta.append([])
+                continue
+            # shared Eq.-15 CTML source (also warms the scalar plan cache)
+            plans = inst.msg_plans_for(i, j, src, dst)
+            meta = []
+            for (lids, _cts, robj) in plans:
+                meta.append((lids, robj))
+                H = max(H, len(lids))
+            R = max(R, len(plans))
+            per_dst.append(plans)
+            route_meta.append(meta)
+        read_idx = np.full((P, R, H), self._neg, dtype=np.intp)
+        base_idx = np.full((P, R, H), L, dtype=np.intp)   # L = -inf slot
+        write_idx = np.full((P, R, H), self._sink, dtype=np.intp)
+        ct = np.full((P, R, H), _NEG_INF, dtype=np.float64)
+        nhops = np.zeros((P, R), dtype=np.int64)
+        invalid = np.ones((P, R), dtype=bool)
+        for dst in range(P):
+            if dst == src:
+                # fake zero-CTML route: final LFT == aft_i exactly, the
+                # scalar path's same-processor arrival contribution
+                ct[dst, 0, :] = 0.0
+                invalid[dst, 0] = False
+                continue
+            for r, (lids, cts, _robj) in enumerate(per_dst[dst]):
+                invalid[dst, r] = False
+                nhops[dst, r] = len(lids)
+                for h, lid in enumerate(lids):
+                    read_idx[dst, r, h] = dst * L + lid
+                    base_idx[dst, r, h] = lid
+                    write_idx[dst, r, h] = dst * L + lid
+                    ct[dst, r, h] = cts[h]
+        vp = _VPlan(read_idx, write_idx, base_idx, ct, nhops, invalid,
+                    route_meta)
+        self._vplans[(i, j, src)] = vp
+        return vp
+
+    # ------------------------------------------------------------------
+    def evaluate(self, j: int) -> Decision:
+        inst = self.inst
+        P = inst.P
+        aft = self.aft
+        proc_of = self.proc_of
+        tent = self._tent
+        vplans = self._vplans
+        maximum = np.maximum
+
+        preds = inst._preds[j]
+        n_preds = len(preds)
+        if n_preds > 1:
+            preds = sorted(preds, key=lambda i: (aft[i], i))
+            np.copyto(self._tent2d, self._lf)    # every lane: base state
+        tent_ready = n_preds > 1
+        last = n_preds - 1
+        finals = []
+        walks = []                               # winner-lane msgs data
+        for k in range(n_preds):
+            i = preds[k]
+            src = proc_of[i]
+            aft_i = aft[i]
+            vp = vplans.get((i, j, src))
+            if vp is None:
+                vp = self._vplan(i, j, src)
+            if vp.R == 1:
+                if tent_ready:
+                    av = tent.take(vp.av_idx)
+                else:                            # single pred: read the
+                    av = self.link_free.take(vp.base_idx)  # base directly
+                ct_rows = vp.ct_rows
+                commit = k < last                # last pred: no readers
+                lst_rows = []
+                lft_rows = []
+                lst = lft = None
+                for h in range(vp.H):
+                    avh = av[h * P:(h + 1) * P]
+                    lst = maximum(avh, aft_i) if h == 0 \
+                        else maximum(avh, lst)   # Eq. 13, reassociated
+                    x = lst + ct_rows[h]
+                    lft = x if h == 0 else maximum(lft, x)   # Eq. 14
+                    if commit:
+                        # LFT_h >= avail_h always: plain scatter commit
+                        tent[vp.w_rows[h]] = lft
+                    lst_rows.append(lst)
+                    lft_rows.append(lft)
+                finals.append(lft)
+                walks.append((i, src, vp, lst_rows, lft_rows, None))
+                continue
+            # ---- multi-route general path ----
+            if not tent_ready:
+                np.copyto(self._tent2d, self._lf)
+                tent_ready = True
+            avail = tent[vp.read_idx]            # (P, R, H) gather
+            lst3 = np.maximum.accumulate(avail, axis=2)
+            lst3 = maximum(lst3, aft_i)
+            lft3 = np.maximum.accumulate(lst3 + vp.ct, axis=2)
+            final = lft3[:, :, -1]               # (P, R) route arrivals
+            if vp.has_invalid:
+                final = np.where(vp.invalid, _INF, final)
+            # lexicographic (LFT, hops, route-index) min per lane
+            nhops = vp.nhops
+            best_f = final[:, 0].copy()
+            best_nh = nhops[:, 0].copy()
+            best_r = np.zeros(P, dtype=np.intp)
+            for r in range(1, vp.R):
+                f = final[:, r]
+                better = (f < best_f) | ((f == best_f) &
+                                         (nhops[:, r] < best_nh))
+                np.copyto(best_f, f, where=better)
+                np.copyto(best_nh, nhops[:, r], where=better)
+                best_r[better] = r
+            sel = best_r[:, None, None]
+            lft_sel = np.take_along_axis(lft3, sel, axis=1)[:, 0, :]
+            wi = np.take_along_axis(vp.write_idx, sel,
+                                    axis=1)[:, 0, :].ravel()
+            tent[wi] = lft_sel.ravel()
+            finals.append(best_f)
+            walks.append((i, src, vp, lst3, lft3, best_r))
+
+        # ---- batched Eqs. 10-12 + Defs. 4.1-4.2 over all P lanes ----
+        if not finals:
+            est = self.proc_free                 # arrival == 0 <= proc_free
+        elif n_preds == 1:
+            est = maximum(self.proc_free, finals[0])
+        else:
+            acc = maximum(finals[0], finals[1])
+            for f in finals[2:]:
+                acc = maximum(acc, f)
+            est = maximum(acc, self.proc_free)   # Eqs. 10-11, reassociated
+        eft = est + inst.comp[j]                 # Eq. 12
+        exit_j = inst._is_exit[j]
+        track = self.want_bound and not exit_j
+        if exit_j:
+            A = None
+            value = eft                          # Def. 4.2
+        else:
+            A = eft * inst.ldet[j]
+            value = A * self._bp                 # Def. 4.1 (cached BP)
+
+        # strict lexicographic (value, eft, proc) argmin, first-index
+        # ties — on exact tolist floats, matching the scalar loop
+        vl = value.tolist()
+        el = eft.tolist()
+        p = 0
+        bv = vl[0]
+        be = el[0]
+        for q in range(1, P):
+            v = vl[q]
+            if v < bv or (v == bv and el[q] < be):
+                p, bv, be = q, v, el[q]
+
+        msgs = []
+        for (i, src, vp, lst_w, lft_w, best_r) in walks:
+            if src == p:
+                continue
+            if best_r is None:                   # hop-major rows
+                lids, robj = vp.route_meta[p][0]
+                msgs.append((i, robj,
+                             [(lids[h], float(lst_w[h][p]),
+                               float(lft_w[h][p]))
+                              for h in range(len(lids))]))
+            else:
+                r = int(best_r[p])
+                lids, robj = vp.route_meta[p][r]
+                msgs.append((i, robj,
+                             [(lids[h], float(lst_w[p, r, h]),
+                               float(lft_w[p, r, h]))
+                              for h in range(len(lids))]))
+
+        if track:
+            B = A * self._lop
+            contrib = self._crossing_vec(p, A, B)
+            ca, cb = tuple(A.tolist()), tuple(B.tolist())
+        else:
+            ca = cb = None
+            contrib = _INF
+        return p, float(est[p]), be, msgs, ca, cb, contrib
+
+    # ------------------------------------------------------------------
+    def _crossing_vec(self, p: int, A: np.ndarray, B: np.ndarray) -> float:
+        """Vectorized :meth:`~.base.CandidateEvaluator.crossing`: same
+        divisions on the same operands, ``min`` is order-free, so the
+        returned float is identical to the scalar rival loop."""
+        d_b = B[p] - B
+        d_a = A - A[p]
+        scale = np.abs(A) + abs(A[p])
+        scale += 1.0
+        thr = 1e-15 * scale
+        mask1 = d_b > thr
+        contrib = _INF
+        if mask1.any():
+            a_star = d_a / np.where(mask1, d_b, 1.0)
+            contrib = float(np.where(mask1, a_star, _INF).min())
+        mask2 = (np.abs(d_b) <= thr) & (np.abs(d_a) <= 1e-12 * scale)
+        mask2[p] = False                 # the scalar loop skips the winner
+        if mask2.any() and self.alpha < contrib:
+            contrib = self.alpha
+        return contrib

@@ -1,0 +1,31 @@
+"""Once-per-process deprecation warnings for the legacy entry points.
+
+The PR-2 shims used to ``warnings.warn`` on *every* call, which turns a
+tight benchmark or sweep loop into hundreds of identical lines even
+under the default warning filters (each ``stacklevel`` call site counts
+as a new location).  :func:`warn_once` emits one real
+``DeprecationWarning`` per key per process — loud enough to notice,
+quiet enough to keep using the shim while migrating.
+
+``reset()`` clears the emitted set so tests can assert the warning
+deterministically (see ``tests/test_deprecation.py``).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Set
+
+_emitted: Set[str] = set()
+
+
+def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning`` for ``key`` only the first time."""
+    if key in _emitted:
+        return
+    _emitted.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset() -> None:
+    """Forget which warnings fired (test isolation helper)."""
+    _emitted.clear()

@@ -1,4 +1,4 @@
-"""Compiled scheduling engine: array-based core for the Eq. 10-15 loop.
+"""Compiled scheduling engine: the decision layer of the Eq. 10-15 loop.
 
 ``list_schedule`` in :mod:`.scheduler` is the readable reference: every
 candidate evaluation copies a string-keyed ``link_free`` dict, re-walks
@@ -13,11 +13,20 @@ per route probed.  :class:`CompiledInstance` preprocesses an
   * the cached ``(n, P)`` computation matrix, the rank/LDET matrices and
     the default period
 
-— and then runs the selection loop against flat Python lists with
-commit/rollback of link state instead of per-candidate dict copies.  Every
-floating-point operation is performed in the same order as the reference,
-so the produced :class:`~.scheduler.Schedule` is bit-identical (asserted
-by ``tests/test_engine_equivalence.py``).
+— and runs the selection loop on top of a pluggable **candidate
+evaluation backend** (:mod:`repro.core.backends`).  The engine itself is
+the *decision layer*: queue walk, precedence checks, decision-trace
+recording/replay, and :class:`~.scheduler.Schedule` assembly.  The
+*numeric layer* — per-task evaluation of all P placement candidates,
+including the sequential message-routing walks with commit/rollback link
+state — is a :class:`~repro.core.backends.CandidateEvaluator`:
+``"scalar"`` (flat Python lists, the bit-exactness reference) or
+``"vector"`` ((P,)-batch NumPy ops, the P >= 8 fast path);
+``backend="auto"`` resolves per instance.  Every backend performs IEEE
+operations whose results are bit-identical to the reference, so the
+produced :class:`~.scheduler.Schedule` is too (asserted by
+``tests/test_engine_equivalence.py`` and
+``tests/test_backend_equivalence.py``).
 
 The engine additionally supports *decision-trace interval skipping* for
 the HVLB_CC alpha sweep (Algorithm 1).  Along a fixed trace (sequence of
@@ -53,6 +62,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backends import BACKENDS, CandidateEvaluator, resolve_backend_name
 from .graph import SPG
 from .ranks import ldet_cc, rank_matrix
 from .scheduler import MessagePlacement, Schedule, SchedulingFailure
@@ -141,28 +151,74 @@ class CompiledInstance:
         # re-committed from a memoized trace.
         self.n_decisions_simulated = 0
         self.n_decisions_replayed = 0
+        # candidate-evaluation backends, built lazily per name
+        self._backends: Dict[str, CandidateEvaluator] = {}
+
+    # ------------------------------------------------------------------
+    def msg_plans_for(self, i: int, j: int, src: int, dst: int) -> list:
+        """Cached per-route ``(link_ids, CTMLs, route_names)`` for message
+        ``e_ij`` travelling ``src -> dst`` — the single source of Eq. 15
+        CTML quantization for every backend (the cross-backend
+        bit-identity contract depends on all of them quantizing through
+        this one code path)."""
+        key = (i, j, src, dst)
+        plans = self._msg_plans.get(key)
+        if plans is None:
+            tpl = self._tpl[(i, j)][src]
+            quant_round = self._ctml_mode == "round"
+            quant_ceil = self._ctml_mode == "ceil"
+            plans = []
+            for (lids, spds, robj) in self._routes[(src, dst)]:
+                cts = []
+                for sp in spds:
+                    t = tpl / sp                             # Eq. 15
+                    if quant_round:
+                        t = float(round(t))
+                    elif quant_ceil:
+                        t = float(np.ceil(t))
+                    cts.append(t)
+                plans.append((lids, tuple(cts), robj))
+            self._msg_plans[key] = plans
+        return plans
+
+    # ------------------------------------------------------------------
+    def backend_instance(self, backend: Optional[str] = None
+                         ) -> CandidateEvaluator:
+        """The (cached) evaluator for a backend name; ``None``/``"auto"``
+        resolve via :func:`repro.core.backends.resolve_backend_name`."""
+        name = resolve_backend_name(backend, self.P, self.tg)
+        be = self._backends.get(name)
+        if be is None:
+            be = BACKENDS[name](self)
+            self._backends[name] = be
+        return be
 
     # ------------------------------------------------------------------
     def schedule(self, queue: Sequence[int], alpha: float = 0.0,
-                 period: Optional[float] = None) -> Schedule:
+                 period: Optional[float] = None,
+                 backend: Optional[str] = None) -> Schedule:
         """Array-core equivalent of :func:`~.scheduler.list_schedule`."""
-        s, _, _ = self._run(queue, alpha, period, want_bound=False)
+        s, _, _ = self._run(queue, alpha, period, want_bound=False,
+                            backend=backend)
         return s
 
     def schedule_with_bound(self, queue: Sequence[int], alpha: float,
-                            period: Optional[float] = None
+                            period: Optional[float] = None,
+                            backend: Optional[str] = None
                             ) -> Tuple[Schedule, float]:
         """Schedule at ``alpha`` and return ``(schedule, bound)`` where the
         decision trace — hence the schedule — is provably unchanged for
         every ``alpha' in [alpha, bound)``."""
-        s, bound, _ = self._run(queue, alpha, period, want_bound=True)
+        s, bound, _ = self._run(queue, alpha, period, want_bound=True,
+                                backend=backend)
         return s, bound
 
     def schedule_traced(self, queue: Sequence[int], alpha: float = 0.0,
                         period: Optional[float] = None,
                         want_bound: bool = True,
                         resume: Optional[DecisionTrace] = None,
-                        resume_pos: int = 0
+                        resume_pos: int = 0,
+                        backend: Optional[str] = None
                         ) -> Tuple[Schedule, float, DecisionTrace]:
         """Schedule and memoize the decision trace.
 
@@ -171,45 +227,35 @@ class CompiledInstance:
         the suffix-replay primitive behind :meth:`api.Scheduler.update`.
         The caller must guarantee the prefix decisions are unchanged
         (same comp/LDET rows, message volumes, and queue prefix); the
-        result is then bit-identical to a from-scratch run.
+        result is then bit-identical to a from-scratch run.  Traces are
+        backend-portable: records hold plain floats and committing them
+        is backend-shared scalar code, so a trace recorded under one
+        backend resumes bit-identically under another.
         """
         return self._run(queue, alpha, period, want_bound=want_bound,
-                         record=True, resume=resume, resume_pos=resume_pos)
+                         record=True, resume=resume, resume_pos=resume_pos,
+                         backend=backend)
 
     # ------------------------------------------------------------------
     def _run(self, queue: Sequence[int], alpha: float,
              period: Optional[float], want_bound: bool,
              record: bool = False,
              resume: Optional[DecisionTrace] = None,
-             resume_pos: int = 0
+             resume_pos: int = 0,
+             backend: Optional[str] = None
              ) -> Tuple[Schedule, float, Optional[DecisionTrace]]:
         g, tg = self.g, self.tg
-        P = self.P
-        comp = self._comp
-        ldet = self._ldet
-        tpl_table = self._tpl
-        routes = self._routes
-        msg_plans = self._msg_plans
         preds_of = self._preds
-        is_exit = self._is_exit
         names = self._link_names
-        mode = self._ctml_mode
-        quant_round = mode == "round"
-        quant_ceil = mode == "ceil"
         if period is None:
             period = self.default_period
 
-        link_free = [0.0] * self._n_links
-        proc_free = [0.0] * P
-        proc_of = [-1] * self.n
-        ast = [0.0] * self.n
-        aft = [0.0] * self.n
-        loads = [0.0] * P
+        be = self.backend_instance(backend)
+        be.start(alpha, period, want_bound)
+        proc_of = be.proc_of
         scheduled = [False] * self.n
         messages: Dict[Tuple[int, int], MessagePlacement] = {}
         bound = _INF
-        cand_A = [0.0] * P
-        cand_B = [0.0] * P
         records: List[DecisionRecord] = []
 
         start = 0
@@ -223,40 +269,22 @@ class CompiledInstance:
             start = resume_pos
             # Re-commit the memoized prefix: the same floating-point state
             # updates in the same order as the original run — no candidate
-            # evaluation, no route walks.
+            # evaluation, no route walks.  Record commits are shared scalar
+            # code, so the trace may come from any backend.
             for rec in resume.records[:resume_pos]:
                 j, p, est, eft, msgs, ca, cb = rec
-                proc_of[j] = p
-                ast[j] = est
-                aft[j] = eft
-                proc_free[p] = eft
-                loads[p] += comp[j][p]
+                be.apply(j, p, est, eft, msgs)
                 for (i, route, iv) in msgs:
                     messages[(i, j)] = MessagePlacement(
                         (i, j), proc_of[i], p, route,
                         [(names[lid], s_, f) for (lid, s_, f) in iv])
-                    for (lid, _s, f) in iv:
-                        if f > link_free[lid]:
-                            link_free[lid] = f
                 scheduled[j] = True
                 if want_bound and ca is not None:
-                    # same crossing-point arithmetic as the live loop below,
-                    # on the memoized candidate coefficients
-                    a_c, b_c = ca[p], cb[p]
-                    for r in range(P):
-                        if r == p:
-                            continue
-                        d_b = b_c - cb[r]
-                        d_a = ca[r] - a_c
-                        scale = abs(a_c) + abs(ca[r]) + 1.0
-                        if d_b > 1e-15 * scale:
-                            a_star = d_a / d_b
-                            if a_star < bound:
-                                bound = a_star
-                        elif abs(d_b) <= 1e-15 * scale and \
-                                abs(d_a) <= 1e-12 * scale:
-                            if alpha < bound:
-                                bound = alpha
+                    # same crossing-point arithmetic as the live path, on
+                    # the memoized candidate coefficients
+                    b = be.crossing(p, ca, cb, alpha)
+                    if b < bound:
+                        bound = b
                 if record:
                     records.append(rec)
             self.n_decisions_replayed += resume_pos
@@ -264,145 +292,24 @@ class CompiledInstance:
         sim_count = 0
         for j in queue[start:] if start else queue:
             sim_count += 1
-            preds = preds_of[j]
-            for i in preds:
+            for i in preds_of[j]:
                 if not scheduled[i]:
                     raise SchedulingFailure(
                         f"task {j} dequeued before predecessor {i} (Sec. 3.2)")
-            order = sorted(preds, key=lambda i: (aft[i], i))
-            comp_j = comp[j]
-            ldet_j = ldet[j]
-            exit_j = is_exit[j]
-            track = want_bound and not exit_j
-            best_value = best_eft = 0.0
-            best_est = 0.0
-            best_p = -1
-            best_msgs: List[Tuple[int, Tuple[str, ...],
-                                  List[Tuple[int, float, float]]]] = []
-
-            for p in range(P):
-                arrival = 0.0
-                msgs: List[Tuple[int, Tuple[str, ...],
-                                 List[Tuple[int, float, float]]]] = []
-                touched: List[Tuple[int, float]] = []
-                for i in order:
-                    src = proc_of[i]
-                    if src == p:
-                        if aft[i] > arrival:
-                            arrival = aft[i]
-                        continue
-                    aft_i = aft[i]
-                    plans = msg_plans.get((i, j, src, p))
-                    if plans is None:
-                        tpl = tpl_table[(i, j)][src]
-                        plans = []
-                        for (lids, spds, robj) in routes[(src, p)]:
-                            cts = []
-                            for sp in spds:
-                                t = tpl / sp                     # Eq. 15
-                                if quant_round:
-                                    t = float(round(t))
-                                elif quant_ceil:
-                                    t = float(np.ceil(t))
-                                cts.append(t)
-                            plans.append((lids, tuple(cts), robj))
-                        msg_plans[(i, j, src, p)] = plans
-                    # --- best route src -> p (Eqs. 13-15) ---
-                    bk0, bk1, bk2 = _INF, 0, 0
-                    best_iv: Optional[List[Tuple[int, float, float]]] = None
-                    best_route: Tuple[str, ...] = ()
-                    for ridx, (lids, cts, robj) in enumerate(plans):
-                        iv: List[Tuple[int, float, float]] = []
-                        first = True
-                        lst = 0.0
-                        lft = 0.0
-                        for h in range(len(lids)):
-                            lid = lids[h]
-                            avail = link_free[lid]
-                            if first:
-                                lst = aft_i if aft_i > avail else avail
-                                first = False
-                            else:
-                                lst = lst if lst > avail else avail
-                            x = lst + cts[h]
-                            lft = lft if lft > x else x          # Eq. 14
-                            iv.append((lid, lst, lft))
-                        nh = len(lids)
-                        if lft < bk0 or (lft == bk0 and
-                                         (nh < bk1 or (nh == bk1 and
-                                                       ridx < bk2))):
-                            bk0, bk1, bk2 = lft, nh, ridx
-                            best_iv = iv
-                            best_route = robj
-                    assert best_iv is not None
-                    for (lid, _s, f) in best_iv:
-                        old = link_free[lid]
-                        touched.append((lid, old))
-                        if f > old:
-                            link_free[lid] = f
-                    msgs.append((i, best_route, best_iv))
-                    if bk0 > arrival:
-                        arrival = bk0
-                pf = proc_free[p]
-                est = pf if pf > arrival else arrival            # Eqs. 10-11
-                eft = est + comp_j[p]                            # Eq. 12
-                if exit_j:
-                    value = eft                                  # Def. 4.2
-                else:
-                    bp = 1.0 + (loads[p] / period) * alpha       # Def. 4.1
-                    value = eft * ldet_j[p] * bp
-                for lid, old in reversed(touched):
-                    link_free[lid] = old
-                if track:
-                    a_p = eft * ldet_j[p]
-                    cand_A[p] = a_p
-                    cand_B[p] = a_p * (loads[p] / period)
-                if best_p < 0 or value < best_value or \
-                        (value == best_value and eft < best_eft):
-                    # strict lexicographic (value, eft, proc): p ascends,
-                    # so an exact (value, eft) tie keeps the earlier proc
-                    best_value, best_eft, best_est = value, eft, est
-                    best_p, best_msgs = p, msgs
-
-            p = best_p
-            proc_of[j] = p
-            ast[j] = best_est
-            aft[j] = best_eft
-            proc_free[p] = best_eft
-            loads[p] += comp_j[p]
-            for (i, route, iv) in best_msgs:
+            p, est, eft, msgs, ca, cb, contrib = be.evaluate(j)
+            be.apply(j, p, est, eft, msgs)
+            for (i, route, iv) in msgs:
                 messages[(i, j)] = MessagePlacement(
                     (i, j), proc_of[i], p, route,
                     [(names[lid], s_, f) for (lid, s_, f) in iv])
-                for (lid, _s, f) in iv:
-                    if f > link_free[lid]:
-                        link_free[lid] = f
             scheduled[j] = True
-            if track:
-                a_c, b_c = cand_A[p], cand_B[p]
-                for r in range(P):
-                    if r == p:
-                        continue
-                    d_b = b_c - cand_B[r]
-                    d_a = cand_A[r] - a_c
-                    scale = abs(a_c) + abs(cand_A[r]) + 1.0
-                    if d_b > 1e-15 * scale:
-                        a_star = d_a / d_b
-                        if a_star < bound:
-                            bound = a_star
-                    elif abs(d_b) <= 1e-15 * scale and \
-                            abs(d_a) <= 1e-12 * scale:
-                        # numerically indistinguishable rival: prediction
-                        # is unreliable, force re-simulation next step
-                        if alpha < bound:
-                            bound = alpha
+            if contrib < bound:
+                bound = contrib
             if record:
-                records.append((j, p, best_est, best_eft, best_msgs,
-                                tuple(cand_A) if track else None,
-                                tuple(cand_B) if track else None))
+                records.append((j, p, est, eft, msgs, ca, cb))
 
         self.n_decisions_simulated += sim_count
         trace = DecisionTrace(tuple(queue), alpha,
                               period, want_bound, records) if record else None
-        return Schedule(g, tg, np.array(proc_of), np.array(ast),
-                        np.array(aft), messages, alpha=alpha), bound, trace
+        return Schedule(g, tg, np.array(proc_of), np.array(be.ast),
+                        np.array(be.aft), messages, alpha=alpha), bound, trace

@@ -2,14 +2,15 @@
 
 Wraps :class:`repro.core.api.Scheduler` with the :class:`HSV_CC` policy;
 bit-identical to the pre-session behaviour (priorities Eq. 8, selection
-EFT * LDET_CC — HVLB_CC with alpha = 0).  New code should use the
-session API directly.
+EFT * LDET_CC — HVLB_CC with alpha = 0).  Emits a ``DeprecationWarning``
+once per process; new code should use the session API directly.
 """
 from __future__ import annotations
 
-import warnings
+from typing import Optional
 
 from .api import HSV_CC, Scheduler
+from .deprecation import warn_once
 from .graph import SPG
 from .scheduler import Schedule
 from .topology import Topology
@@ -17,9 +18,11 @@ from .topology import Topology
 __all__ = ["schedule_hsv_cc"]
 
 
-def schedule_hsv_cc(g: SPG, tg: Topology,
-                    engine: str = "compiled") -> Schedule:
+def schedule_hsv_cc(g: SPG, tg: Topology, engine: str = "compiled",
+                    backend: Optional[str] = None) -> Schedule:
     """Deprecated: ``Scheduler(tg, policy=HSV_CC()).submit(g).schedule``."""
-    warnings.warn("schedule_hsv_cc is deprecated; use repro.core.Scheduler "
-                  "with the HSV_CC policy", DeprecationWarning, stacklevel=2)
-    return Scheduler(tg, policy=HSV_CC(), engine=engine).submit(g).schedule
+    warn_once("schedule_hsv_cc",
+              "schedule_hsv_cc is deprecated; use repro.core.Scheduler "
+              "with the HSV_CC policy")
+    return Scheduler(tg, policy=HSV_CC(), engine=engine,
+                     backend=backend).submit(g).schedule

@@ -6,15 +6,16 @@ code should hold a ``Scheduler`` instead, which shares the compiled
 instance, priority queues, and decision traces across calls and exposes
 ``submit_many`` / incremental ``update``.  The shims are kept so the
 paper-experiment drivers and downstream users keep working; they emit a
-:class:`DeprecationWarning` and will be removed once nothing in-tree
-imports them (see DESIGN.md §4, "Deprecation policy").
+:class:`DeprecationWarning` once per process (see
+:mod:`repro.core.deprecation`) and will be removed once nothing in-tree
+imports them (DESIGN.md §4, "Deprecation policy").
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 from .api import HVLB_CC_A, HVLB_CC_B, Scheduler, SweepResult
+from .deprecation import warn_once
 from .graph import SPG
 from .scheduler import Schedule
 from .topology import Topology
@@ -22,22 +23,14 @@ from .topology import Topology
 __all__ = ["SweepResult", "schedule_hvlb_cc", "schedule_hvlb_cc_best"]
 
 
-def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
-                     alpha_max: float = 3.0, alpha_step: float = 0.01,
-                     period: Optional[float] = None,
-                     depth_power: int = 2,
-                     outd_mode: str = "indicator",
-                     engine: str = "compiled",
-                     sweep: str = "grid",
-                     coarse_factor: int = 10) -> SweepResult:
-    """Algorithm 1: sweep alpha in [0, alpha_max], keep min makespan.
-
-    .. deprecated:: use ``Scheduler(tg, policy=HVLB_CC_A(...)).submit(g)``;
-       the returned ``Plan.sweep`` is this function's ``SweepResult``.
-    """
-    warnings.warn("schedule_hvlb_cc is deprecated; use "
-                  "repro.core.Scheduler with an HVLB_CC_A/HVLB_CC_B policy",
-                  DeprecationWarning, stacklevel=2)
+def _run(g: SPG, tg: Topology, variant: str = "A", alpha_max: float = 3.0,
+         alpha_step: float = 0.01, period: Optional[float] = None,
+         depth_power: int = 2, outd_mode: str = "indicator",
+         engine: str = "compiled", sweep: str = "grid",
+         coarse_factor: int = 10,
+         backend: Optional[str] = None) -> SweepResult:
+    """Shared implementation (and single source of defaults) of the two
+    deprecated shims below."""
     if variant.upper() == "A":
         policy = HVLB_CC_A(alpha_max=alpha_max, alpha_step=alpha_step,
                            period=period, sweep=sweep,
@@ -49,14 +42,34 @@ def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
                            depth_power=depth_power, outd_mode=outd_mode)
     else:
         raise ValueError(f"unknown variant {variant!r}")
-    return Scheduler(tg, policy=policy, engine=engine).submit(g).sweep
+    return Scheduler(tg, policy=policy, engine=engine,
+                     backend=backend).submit(g).sweep
+
+
+def schedule_hvlb_cc(g: SPG, tg: Topology, variant: str = "A",
+                     alpha_max: float = 3.0, alpha_step: float = 0.01,
+                     period: Optional[float] = None,
+                     depth_power: int = 2,
+                     outd_mode: str = "indicator",
+                     engine: str = "compiled",
+                     sweep: str = "grid",
+                     coarse_factor: int = 10,
+                     backend: Optional[str] = None) -> SweepResult:
+    """Algorithm 1: sweep alpha in [0, alpha_max], keep min makespan.
+
+    .. deprecated:: use ``Scheduler(tg, policy=HVLB_CC_A(...)).submit(g)``;
+       the returned ``Plan.sweep`` is this function's ``SweepResult``.
+    """
+    warn_once("schedule_hvlb_cc",
+              "schedule_hvlb_cc is deprecated; use repro.core.Scheduler "
+              "with an HVLB_CC_A/HVLB_CC_B policy")
+    return _run(g, tg, variant, alpha_max, alpha_step, period, depth_power,
+                outd_mode, engine, sweep, coarse_factor, backend)
 
 
 def schedule_hvlb_cc_best(g: SPG, tg: Topology, **kw) -> Schedule:
     """Deprecated: ``Scheduler(...).submit(g).schedule``."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        res = schedule_hvlb_cc(g, tg, **kw)
-    warnings.warn("schedule_hvlb_cc_best is deprecated; use "
-                  "repro.core.Scheduler", DeprecationWarning, stacklevel=2)
-    return res.best
+    warn_once("schedule_hvlb_cc_best",
+              "schedule_hvlb_cc_best is deprecated; use "
+              "repro.core.Scheduler")
+    return _run(g, tg, **kw).best

@@ -90,9 +90,10 @@ def _policy_for(algorithm: str, alpha_max: float):
 
 def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
                    alpha_max: float = 3.0,
-                   engine: str = "compiled") -> PlacementPlan:
+                   engine: str = "compiled",
+                   backend: Optional[str] = None) -> PlacementPlan:
     sched = Scheduler(tg, policy=_policy_for(algorithm, alpha_max),
-                      engine=engine)
+                      engine=engine, backend=backend)
     s = sched.submit(g).schedule
     return PlacementPlan(
         schedule=s, algorithm=algorithm, makespan_s=s.makespan,
@@ -102,11 +103,12 @@ def plan_placement(g: SPG, tg: Topology, algorithm: str = "hvlb_b",
 
 def replan(g: SPG, tg: Topology, measured_rates: Sequence[float],
            algorithm: str = "hvlb_b",
-           engine: str = "compiled") -> PlacementPlan:
+           engine: str = "compiled",
+           backend: Optional[str] = None) -> PlacementPlan:
     """Straggler mitigation: re-run the static scheduler with observed
     slice rates (the paper's time-predictable alternative to dynamic
     work stealing)."""
     tg2 = Topology(tg.proc_names, np.asarray(measured_rates, float),
                    dict(tg.link_speed), dict(tg.routes),
                    ctml_mode=tg.ctml_mode)
-    return plan_placement(g, tg2, algorithm, engine=engine)
+    return plan_placement(g, tg2, algorithm, engine=engine, backend=backend)

@@ -58,7 +58,8 @@ class StepResult:
 
 class DSMSEngine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
-                 max_seq: int, n_slices: int = 4):
+                 max_seq: int, n_slices: int = 4,
+                 backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -70,8 +71,11 @@ class DSMSEngine:
             lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))
         self.topology = tpu_slice_topology(n_slices=n_slices,
                                            chips_per_slice=4, pods=1)
+        # backend: candidate-evaluation backend for the static scheduler
+        # ("auto" picks the (P,)-vector path on wide slice topologies)
         self.scheduler = Scheduler(
-            self.topology, policy=HVLB_CC_IC(alpha_max=2.0, alpha_step=0.1))
+            self.topology, policy=HVLB_CC_IC(alpha_max=2.0, alpha_step=0.1),
+            backend=backend)
         self.plan = None
         self.holes: Dict[int, float] = {}
         self.replans = 0                    # scheduler invocations (test-pinned)

@@ -1,0 +1,246 @@
+"""Scalar vs vector candidate-evaluation backends, bit for bit.
+
+The vector backend re-expresses the engine's per-processor candidate
+loop as (P,)-batch array ops, reassociating only exact operations
+(IEEE max), so its schedules — start/finish floats, message routes,
+per-link intervals, alpha-sweep curves, crossing bounds, IC holes, and
+decision-replay counters — must equal the scalar backend's exactly.
+No tolerance anywhere in this file.
+
+Covered: the paper worked example (multi-route topology, CTML
+quantization), the 200-graph mixed-config corpus, wide single-route
+topologies (P = 8, 16 — where "auto" actually picks vector), all four
+policies including HVLB_CC_IC schedule holes / precision, and
+``Scheduler.update`` trace replay across backends (traces are
+backend-portable).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC,
+                        CompiledInstance, Scheduler, paper_spg,
+                        paper_topology, random_spg, resolve_backend_name)
+from repro.core.backends import AUTO_VECTOR_MIN_P, BackendCompatError
+from repro.core.backends.vector import VectorBackend
+from repro.core.ranks import hprv_b, priority_queue, rank_matrix
+from repro.core.topology import Topology, fully_switched_topology
+
+RATE_PATTERNS = [(1.0, 0.67, 0.83), (0.83, 0.67, 1.0), (0.67, 0.83, 1.0)]
+
+POLICIES = [
+    HSV_CC(),
+    HVLB_CC_A(alpha_max=1.0, alpha_step=0.25, period=150.0),
+    HVLB_CC_B(alpha_max=1.0, alpha_step=0.25, period=150.0),
+    HVLB_CC_IC(alpha_max=1.0, alpha_step=0.25, period=150.0),
+]
+
+
+def assert_identical(a, b):
+    assert np.array_equal(a.proc, b.proc)
+    assert np.array_equal(a.start, b.start)        # exact, no tolerance
+    assert np.array_equal(a.finish, b.finish)
+    assert set(a.messages) == set(b.messages)
+    for e, ma in a.messages.items():
+        mb = b.messages[e]
+        assert ma.route == mb.route
+        assert ma.intervals == mb.intervals        # exact floats
+        assert (ma.src_proc, ma.dst_proc) == (mb.src_proc, mb.dst_proc)
+
+
+def assert_plans_identical(pa, pb):
+    assert_identical(pa.schedule, pb.schedule)
+    assert pa.period == pb.period
+    if pa.sweep is not None:
+        assert np.array_equal(pa.sweep.alphas, pb.sweep.alphas)
+        assert np.array_equal(pa.sweep.makespans, pb.sweep.makespans)
+        assert pa.sweep.best_alpha == pb.sweep.best_alpha
+    if pa.holes is not None:
+        assert pa.holes == pb.holes                # exact, inf included
+
+
+def _case(seed: int):
+    """Same mixed-config generator as tests/test_engine_equivalence.py."""
+    rng = np.random.default_rng(seed)
+    rates = RATE_PATTERNS[seed % 3]
+    tg = paper_topology(rates=rates)
+    ccr = [0.1, 1.0, 10.0][(seed // 3) % 3]
+    constrained = (seed // 9) % 2 == 0
+    n = int(rng.integers(8, 31))
+    g = random_spg(n, rng, ccr=ccr, tg=tg, outdeg_constraint=constrained)
+    return g, tg
+
+
+def _wide(P: int, seed: int, n: int = 28):
+    rng = np.random.default_rng(seed)
+    tg = fully_switched_topology(P, rates=rng.uniform(0.6, 1.2, size=P),
+                                 link_speeds=rng.uniform(0.5, 3.0, size=P))
+    g = random_spg(n, rng, ccr=1.0, tg=tg, max_in=3, max_out=6)
+    return g, tg
+
+
+# ---------------------------------------------------------------- paper
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=lambda p: type(p).__name__)
+def test_paper_example_policies_backend_identical(policy):
+    g, tg = paper_spg(), paper_topology()
+    pa = Scheduler(tg, backend="scalar").submit(g, policy)
+    pb = Scheduler(tg, backend="vector").submit(g, policy)
+    assert pa.backend == "scalar" and pb.backend == "vector"
+    assert_plans_identical(pa, pb)
+    if isinstance(policy, HVLB_CC_IC):
+        # unbounded exit holes and degradation curves match exactly
+        assert any(np.isinf(h) for h in pa.holes.values())
+        for t in pa.holes:
+            for lam in (0.5, 2.0, 100.0):
+                assert pa.precision(t, lam) == pb.precision(t, lam)
+
+
+# ------------------------------------------------------------- corpus
+@pytest.mark.parametrize("seed", range(200))
+def test_backend_equivalence_random(seed):
+    """Bit-identical single passes and crossing bounds on the 200-graph
+    corpus (paper-style multi-route topology, both backends sharing one
+    compiled instance)."""
+    g, tg = _case(seed)
+    r = rank_matrix(g, tg)
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    inst = CompiledInstance(g, tg, rank=r)
+    for alpha in (0.0, 0.85):
+        s = inst.schedule(q, alpha=alpha, backend="scalar")
+        v = inst.schedule(q, alpha=alpha, backend="vector")
+        assert_identical(s, v)
+        sb, bs = inst.schedule_with_bound(q, alpha, backend="scalar")
+        vb, bv = inst.schedule_with_bound(q, alpha, backend="vector")
+        assert_identical(sb, vb)
+        assert bs == bv                            # exact bound float
+
+
+@pytest.mark.parametrize("seed", range(0, 200, 13))
+def test_policy_equivalence_random(seed):
+    """All four policies produce identical plans under both backends on a
+    corpus slice (sweeps, best schedules, IC holes).  Where a policy's
+    HPRV_A queue cannot order an unconstrained graph (the Section-3.2
+    failure mode), both backends must fail the same way."""
+    from repro.core import SchedulingFailure
+
+    g, tg = _case(seed)
+    for policy in POLICIES:
+        try:
+            pa = Scheduler(tg, backend="scalar").submit(g, policy)
+        except SchedulingFailure:
+            with pytest.raises(SchedulingFailure):
+                Scheduler(tg, backend="vector").submit(g, policy)
+            continue
+        pb = Scheduler(tg, backend="vector").submit(g, policy)
+        assert_plans_identical(pa, pb)
+
+
+@pytest.mark.parametrize("P", [8, 16])
+@pytest.mark.parametrize("seed", [3, 17])
+def test_backend_equivalence_wide_topology(P, seed):
+    """Equivalence where auto-selection actually picks vector."""
+    g, tg = _wide(P, seed)
+    r = rank_matrix(g, tg)
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    inst = CompiledInstance(g, tg, rank=r)
+    for alpha in (0.0, 1.2):
+        assert_identical(inst.schedule(q, alpha=alpha, backend="scalar"),
+                         inst.schedule(q, alpha=alpha, backend="vector"))
+        sb, bs = inst.schedule_with_bound(q, alpha, backend="scalar")
+        vb, bv = inst.schedule_with_bound(q, alpha, backend="vector")
+        assert_identical(sb, vb)
+        assert bs == bv
+    pa = Scheduler(tg, backend="scalar").submit(
+        g, HVLB_CC_B(alpha_max=1.0, alpha_step=0.25))
+    pb = Scheduler(tg, backend="vector").submit(
+        g, HVLB_CC_B(alpha_max=1.0, alpha_step=0.25))
+    assert_plans_identical(pa, pb)
+
+
+# ------------------------------------------------------- update replay
+@pytest.mark.parametrize("seed,factor", [(0, 0.8), (2, 1.5), (5, 0.7)])
+def test_update_replay_backend_identical(seed, factor):
+    """update() replays identically under both backends: same suffix
+    start, same replay counters, bit-identical plans."""
+    rng = np.random.default_rng(seed)
+    tg = paper_topology()
+    g = random_spg(40, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    plans = {}
+    for backend in ("scalar", "vector"):
+        sched = Scheduler(tg, policy=policy, backend=backend)
+        plan = sched.submit(g)
+        task = int(np.argmax(plan.schedule.start))
+        plans[backend] = sched.update(task_rates={task: factor})
+    ua, ub = plans["scalar"], plans["vector"]
+    assert_plans_identical(ua, ub)
+    assert dataclasses.asdict(ua.replay) == dataclasses.asdict(ub.replay)
+
+
+def test_update_resumes_trace_recorded_by_other_backend():
+    """Traces are backend-portable: a trace recorded under scalar replays
+    bit-identically when the update runs under vector (and vice versa)."""
+    rng = np.random.default_rng(11)
+    tg = paper_topology()
+    g = random_spg(40, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    sched = Scheduler(tg, policy=policy)
+    plan = sched.submit(g, backend="scalar")
+    task = int(np.argmax(plan.schedule.start))
+    upd = sched.update(task_rates={task: 0.8}, backend="vector")
+    assert upd.backend == "vector"
+    fresh = Scheduler(tg).submit(
+        upd.graph, dataclasses.replace(policy, period=plan.period))
+    assert_identical(upd.schedule, fresh.schedule)
+
+
+# ------------------------------------------------------- auto-selection
+ONE_POINT = HVLB_CC_B(alpha_max=0.0, alpha_step=0.5)   # orders any DAG
+
+
+def test_auto_selection_by_processor_count(monkeypatch):
+    # the CI matrix pins REPRO_SCHED_BACKEND; this test is about "auto"
+    monkeypatch.delenv("REPRO_SCHED_BACKEND", raising=False)
+    g3, tg3 = paper_spg(), paper_topology()
+    assert Scheduler(tg3).submit(g3, ONE_POINT).backend == "scalar"
+    g8, tg8 = _wide(AUTO_VECTOR_MIN_P, 5)
+    assert Scheduler(tg8).submit(g8, ONE_POINT).backend == "vector"
+    # per-call override beats the session default
+    assert Scheduler(tg8, backend="scalar").submit(
+        g8, ONE_POINT, backend="vector").backend == "vector"
+    # reference engine has no numeric backend
+    assert Scheduler(tg3, engine="reference").submit(
+        g3, ONE_POINT).backend is None
+
+
+def test_env_var_overrides_default_backend(monkeypatch):
+    g, tg = paper_spg(), paper_topology()
+    monkeypatch.setenv("REPRO_SCHED_BACKEND", "vector")
+    plan = Scheduler(tg).submit(g, ONE_POINT)
+    assert plan.backend == "vector"
+    # explicit arguments still win over the environment
+    assert Scheduler(tg, backend="scalar").submit(
+        g, ONE_POINT).backend == "scalar"
+
+
+def test_unknown_backend_rejected():
+    g, tg = paper_spg(), paper_topology()
+    with pytest.raises(ValueError, match="unknown backend"):
+        Scheduler(tg, backend="pallas").submit(g, HSV_CC())
+
+
+def test_link_repeating_route_falls_back_to_scalar():
+    """A route visiting a link twice is out of the vector backend's
+    contract: auto falls back to scalar, explicit vector refuses."""
+    P = AUTO_VECTOR_MIN_P
+    loops = {(a, b): [tuple(f"l{a}" for _ in range(2))]
+             for a in range(P) for b in range(a + 1, P)}
+    tg = Topology([f"p{i}" for i in range(P)], np.ones(P),
+                  {f"l{i}": 1.0 for i in range(P)}, loops)
+    assert resolve_backend_name("auto", P, tg) == "scalar"
+    g = random_spg(10, np.random.default_rng(0), ccr=1.0, tg=tg)
+    inst = CompiledInstance(g, tg)
+    with pytest.raises(BackendCompatError, match="twice"):
+        inst.backend_instance("vector")

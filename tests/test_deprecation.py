@@ -1,0 +1,79 @@
+"""The PR-2 shims: one real DeprecationWarning per process, output
+bit-identical to the session API they wrap."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (HSV_CC, HVLB_CC_A, Scheduler, deprecation,
+                        paper_spg, paper_topology, schedule_hsv_cc,
+                        schedule_hvlb_cc, schedule_hvlb_cc_best)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    deprecation.reset()
+    yield
+    deprecation.reset()
+
+
+def test_schedule_hsv_cc_warns_once_and_matches_session():
+    g, tg = paper_spg(), paper_topology()
+    with pytest.warns(DeprecationWarning, match="schedule_hsv_cc"):
+        s = schedule_hsv_cc(g, tg)
+    # second call: shim stays usable, but silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s2 = schedule_hsv_cc(g, tg)
+    ref = Scheduler(tg, policy=HSV_CC()).submit(g).schedule
+    for other in (s2, ref):
+        np.testing.assert_array_equal(s.proc, other.proc)
+        np.testing.assert_array_equal(s.start, other.start)
+        np.testing.assert_array_equal(s.finish, other.finish)
+
+
+def test_schedule_hvlb_cc_warns_once_and_matches_session():
+    g, tg = paper_spg(), paper_topology()
+    with pytest.warns(DeprecationWarning, match="schedule_hvlb_cc"):
+        res = schedule_hvlb_cc(g, tg, variant="A", alpha_max=1.0,
+                               alpha_step=0.5, period=150.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        res2 = schedule_hvlb_cc(g, tg, variant="A", alpha_max=1.0,
+                                alpha_step=0.5, period=150.0)
+    plan = Scheduler(tg).submit(g, HVLB_CC_A(alpha_max=1.0, alpha_step=0.5,
+                                             period=150.0))
+    for other in (res2, plan.sweep):
+        np.testing.assert_array_equal(res.alphas, other.alphas)
+        np.testing.assert_array_equal(res.makespans, other.makespans)
+        assert res.best_alpha == other.best_alpha
+        np.testing.assert_array_equal(res.best.finish, other.best.finish)
+
+
+def test_schedule_hvlb_cc_best_warns_its_own_key():
+    g, tg = paper_spg(), paper_topology()
+    with pytest.warns(DeprecationWarning, match="schedule_hvlb_cc_best"):
+        best = schedule_hvlb_cc_best(g, tg, alpha_max=1.0, alpha_step=0.5,
+                                     period=150.0)
+    # _best does not consume schedule_hvlb_cc's own once-flag
+    with pytest.warns(DeprecationWarning, match="schedule_hvlb_cc is"):
+        res = schedule_hvlb_cc(g, tg, variant="A", alpha_max=1.0,
+                               alpha_step=0.5, period=150.0)
+    np.testing.assert_array_equal(best.finish, res.best.finish)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        schedule_hvlb_cc_best(g, tg, alpha_max=1.0, alpha_step=0.5,
+                              period=150.0)
+
+
+def test_sweepresult_curve_warns_once():
+    g, tg = paper_spg(), paper_topology()
+    plan = Scheduler(tg).submit(g, HVLB_CC_A(alpha_max=1.0, alpha_step=0.5,
+                                             period=150.0))
+    with pytest.warns(DeprecationWarning, match="alphas"):
+        pts = plan.sweep.curve
+    assert pts == list(zip(plan.sweep.alphas.tolist(),
+                           plan.sweep.makespans.tolist()))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan.sweep.curve

@@ -66,7 +66,9 @@ def test_paper_example_sweep_identical(variant):
                            period=150.0, engine="reference")
     eng = schedule_hvlb_cc(g, tg, variant=variant, alpha_max=3.0,
                            period=150.0, engine="compiled")
-    assert ref.curve == eng.curve                  # every grid point exact
+    # every grid point exact
+    assert np.array_equal(ref.alphas, eng.alphas)
+    assert np.array_equal(ref.makespans, eng.makespans)
     assert ref.best_alpha == eng.best_alpha
     assert_identical(ref.best, eng.best)
     # session == shim == reference, on both engines
@@ -74,7 +76,8 @@ def test_paper_example_sweep_identical(variant):
         alpha_max=3.0, period=150.0)
     for engine in ("compiled", "reference"):
         plan = Scheduler(tg, engine=engine).submit(g, policy)
-        assert plan.sweep.curve == ref.curve
+        assert np.array_equal(plan.sweep.alphas, ref.alphas)
+        assert np.array_equal(plan.sweep.makespans, ref.makespans)
         assert plan.best_alpha == ref.best_alpha
         assert_identical(plan.schedule, ref.best)
 
@@ -126,7 +129,8 @@ def test_sweep_equivalence_random(seed):
                            alpha_step=0.25, engine="reference")
     eng = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
                            alpha_step=0.25, engine="compiled")
-    assert ref.curve == eng.curve
+    assert np.array_equal(ref.alphas, eng.alphas)
+    assert np.array_equal(ref.makespans, eng.makespans)
     assert ref.best_alpha == eng.best_alpha
     assert_identical(ref.best, eng.best)
     eng.best.validate()
@@ -172,6 +176,6 @@ def test_adaptive_sweep_never_worse_than_coarse_and_valid():
     res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=2.0,
                            alpha_step=0.05, sweep="adaptive")
     res.best.validate()
-    assert res.best.makespan == pytest.approx(
-        min(m for _, m in res.curve))
-    assert any(a == pytest.approx(res.best_alpha) for a, _ in res.curve)
+    assert res.best.makespan == pytest.approx(res.makespans.min())
+    assert any(a == pytest.approx(res.best_alpha)
+               for a in res.alphas.tolist())

@@ -106,7 +106,8 @@ def test_hvlb_b_alpha_window_fig5(case):
     and gives 71 at alpha = 0 (period = 150 reproduces the paper's axis)."""
     g, tg = case
     res = schedule_hvlb_cc(g, tg, variant="B", alpha_max=3.0, period=150.0)
-    curve = dict((round(a, 2), m) for a, m in res.curve)
+    curve = dict(zip(np.round(res.alphas, 2).tolist(),
+                     res.makespans.tolist()))
     assert curve[0.0] == pytest.approx(71.0)
     for a in (1.06, 1.08, 1.10):
         assert curve[a] == pytest.approx(62.0)
