@@ -2,7 +2,8 @@
 
   python benchmarks/check_regression.py BASELINE FRESH \\
       --row exp7.P8.n500.schedule_us [--row ...] [--max-regress 0.20] \\
-      [--min-derived exp7.P8.n100.ref_schedule_us:2.0 ...]
+      [--min-derived exp7.P8.n100.ref_schedule_us:2.0 ...] \\
+      [--max-derived exp7.P8.n500.cold_submit_us:1.6 ...]
 
 Exits non-zero (for CI) if any watched row's ``us_per_call`` regressed by
 more than ``--max-regress`` (fraction) relative to the baseline.  Rows
@@ -10,11 +11,13 @@ missing from either snapshot fail too — a silently dropped watchdog row
 is itself a regression.
 
 ``--row`` compares absolute microseconds across snapshots, which only
-makes sense on comparable hardware; ``--min-derived`` gates a row's
-``derived`` value of the *fresh* snapshot alone (e.g. the exp7
-``ref_schedule_us`` rows, whose derived field is the same-machine
-engine-vs-reference speedup), so it stays meaningful on CI runners whose
-absolute speed differs from the machine that recorded the baseline.
+makes sense on comparable hardware; ``--min-derived`` /
+``--max-derived`` gate a row's ``derived`` value of the *fresh* snapshot
+alone (e.g. the exp7 ``ref_schedule_us`` rows, whose derived field is
+the same-machine engine-vs-reference speedup, or ``cold_submit_us``,
+whose derived field is the same-run cold/warm ratio), so they stay
+meaningful on CI runners whose absolute speed differs from the machine
+that recorded the baseline.
 """
 from __future__ import annotations
 
@@ -42,9 +45,14 @@ def main() -> int:
                     metavar="NAME:VALUE",
                     help="fail if the fresh row's derived value is below "
                          "VALUE (machine-independent gate, repeatable)")
+    ap.add_argument("--max-derived", action="append", default=[],
+                    metavar="NAME:VALUE",
+                    help="fail if the fresh row's derived value is above "
+                         "VALUE (machine-independent gate, repeatable)")
     args = ap.parse_args()
-    if not args.row and not args.min_derived:
-        ap.error("nothing to check: pass --row and/or --min-derived")
+    if not args.row and not args.min_derived and not args.max_derived:
+        ap.error("nothing to check: pass --row, --min-derived and/or "
+                 "--max-derived")
 
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
@@ -61,16 +69,19 @@ def main() -> int:
               f"{fresh[name][0]:.1f}us "
               f"({ratio:.2f}x, limit {1.0 + args.max_regress:.2f}x)")
         failed |= status == "FAIL"
-    for spec in args.min_derived:
-        name, _, floor = spec.rpartition(":")
-        if name not in fresh:
-            print(f"FAIL {name}: missing from fresh snapshot")
-            failed = True
-            continue
-        value = float(fresh[name][1])
-        status = "FAIL" if value < float(floor) else "ok"
-        print(f"{status} {name}: derived {value:.2f} (floor {floor})")
-        failed |= status == "FAIL"
+    for bound_specs, below, kind in ((args.min_derived, True, "floor"),
+                                     (args.max_derived, False, "ceiling")):
+        for spec in bound_specs:
+            name, _, bound = spec.rpartition(":")
+            if name not in fresh:
+                print(f"FAIL {name}: missing from fresh snapshot")
+                failed = True
+                continue
+            value = float(fresh[name][1])
+            bad = value < float(bound) if below else value > float(bound)
+            status = "FAIL" if bad else "ok"
+            print(f"{status} {name}: derived {value:.2f} ({kind} {bound})")
+            failed |= bad
     return 1 if failed else 0
 
 

@@ -13,6 +13,19 @@ Measures scheduler latency for n in {50, 100, 200, 500} tasks on P in
                           same-run scalar/vector speedup — the
                           machine-independent number the regression
                           gate watches),
+  * ``cold_submit_us``  — the *first* vector pass on a freshly
+                          compiled instance (P >= 8), which pays the
+                          shared per-src route-tensor layout builds
+                          (``derived`` = cold/warm ratio; the shared
+                          layout precompute keeps it ~1.2x at n=500
+                          where the per-(edge, src) builds used to
+                          cost ~2x),
+  * ``pallas_schedule_us`` — the same pass on the JAX/Pallas device
+                          backend in interpreter mode (n=50 rows only,
+                          skipped when jax is not installed;
+                          ``derived`` = scalar/pallas ratio — well
+                          below 1 under the interpreter, tracked for
+                          the day a compiled device path exists),
   * ``sweep_us``        — a full HVLB_CC alpha sweep (alpha_max=5,
                           step=0.05) with decision-trace interval
                           skipping (``derived`` = distinct makespan
@@ -39,6 +52,11 @@ from .common import row, timed
 
 SIZES = (50, 100, 200, 500)
 PROCS = (3, 8, 16)
+
+
+def _has_jax() -> bool:
+    import importlib.util
+    return importlib.util.find_spec("jax") is not None
 
 
 def _topology(P: int):
@@ -108,6 +126,27 @@ def run(full: bool = False, engine: str = "compiled",
                 assert np.array_equal(res["v"].finish, s.finish)
                 rows.append(row(f"exp7.P{P}.n{n}.vec_schedule_us", vec_us,
                                 sched_us / vec_us))  # scalar/vector speedup
+                # cold submit: first vector pass on a fresh instance pays
+                # the shared per-src layout builds, nothing per-edge
+                cold_us = float("inf")
+                for _ in range(3):
+                    inst2 = CompiledInstance(g, tg, rank=r)
+                    t0 = time.perf_counter()
+                    s2 = inst2.schedule(q, alpha=1.0, backend="vector")
+                    cold_us = min(cold_us,
+                                  (time.perf_counter() - t0) * 1e6)
+                assert np.array_equal(s2.finish, s.finish)
+                rows.append(row(f"exp7.P{P}.n{n}.cold_submit_us", cold_us,
+                                cold_us / vec_us))   # cold/warm ratio
+            if compiled and n == 50 and _has_jax():
+                # device backend (interpret mode off-TPU): correctness
+                # groundwork, decision-identical to scalar on the spot
+                (pallas_us,) = _min_of(2, lambda: res.__setitem__(
+                    "p", inst.schedule(q, alpha=1.0, backend="pallas")))
+                assert np.array_equal(res["p"].proc, s.proc)
+                assert np.allclose(res["p"].finish, s.finish)
+                rows.append(row(f"exp7.P{P}.n{n}.pallas_schedule_us",
+                                pallas_us, sched_us / pallas_us))
             if compiled and n <= 100:
                 t0 = time.perf_counter()
                 ref = list_schedule(g, tg, q, r, alpha=1.0)
@@ -115,6 +154,8 @@ def run(full: bool = False, engine: str = "compiled",
                 assert np.array_equal(ref.finish, s.finish)
                 rows.append(row(f"exp7.P{P}.n{n}.ref_schedule_us", ref_us,
                                 ref_us / sched_us))  # engine speedup
+            if backend == "pallas" and n > 50:
+                continue    # interpret-mode sweeps: minutes per point
             if n <= 200 and (P <= 8 or n <= 100):
                 plan, sweep_us = timed(
                     Scheduler(tg, engine=engine, backend=backend).submit, g,

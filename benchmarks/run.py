@@ -81,9 +81,11 @@ def main() -> None:
                     choices=["compiled", "reference"],
                     help="scheduler implementation for the experiments")
     ap.add_argument("--backend", type=str, default=None,
-                    choices=["auto", "scalar", "vector"],
+                    choices=["auto", "scalar", "vector", "pallas"],
                     help="candidate-evaluation backend for the compiled "
-                         "engine (default: auto / $REPRO_SCHED_BACKEND)")
+                         "engine (default: auto / $REPRO_SCHED_BACKEND); "
+                         "pallas requires jax and runs the device kernel "
+                         "(interpret mode off-TPU)")
     ap.add_argument("--json", type=str, nargs="?", const="BENCH_sched.json",
                     default=None, metavar="PATH",
                     help="also write a JSON snapshot (incl. the "

@@ -60,7 +60,12 @@ print(f"\nafter drift: makespan={upd.makespan:.1f}; probe said "
 # 6. Wide clusters: on P >= 8 processors "auto" resolves to the
 #    vectorized backend; the plan records which numeric layer ran.
 #    An explicit override is per-call: sched.submit(g, backend="scalar").
+#    With jax installed, backend="pallas" (opt-in; auto never picks it)
+#    runs every decision's P-candidate evaluation in a single Pallas
+#    device kernel — interpret mode on CPU, decision-identical schedules
+#    (DESIGN.md §5).
 print(f"\nbackend on this 3-processor example: {upd.backend} "
-      "(vector kicks in from P >= 8)")
+      "(vector kicks in from P >= 8; backend='pallas' opts into the "
+      "device kernel)")
 
 print("\n(paper: HSV_CC=73, HVLB_CC=62 — see tests/test_paper_example.py)")

@@ -36,9 +36,13 @@ helper calls.
 Every schedule ultimately runs on a *candidate-evaluation backend*
 (:mod:`repro.core.backends`): ``backend="auto"`` (default) picks the
 (P,)-batch vector backend on wide topologies and the scalar reference
-loop otherwise — all backends are bit-identical, so the knob (session
-constructor, per-call override, or the ``REPRO_SCHED_BACKEND``
-environment variable) is purely about speed.
+loop otherwise; ``backend="pallas"`` (opt-in, requires jax) runs each
+decision's candidate batch in a Pallas device kernel.  The NumPy
+backends are bit-identical and pallas is decision-identical (DESIGN
+§5), so the knob (session constructor, per-call override, or the
+``REPRO_SCHED_BACKEND`` environment variable) is about speed, not
+results.  Backend/topology compatibility is validated when the name
+resolves — before any session state is built.
 
 The pre-existing one-shot functions (``schedule_hsv_cc``,
 ``schedule_hvlb_cc``, ``schedule_hvlb_cc_best``) remain as thin
@@ -357,11 +361,15 @@ class Scheduler:
     fall back to a full re-plan).
 
     ``backend`` selects the compiled engine's candidate-evaluation
-    backend (:mod:`repro.core.backends`): ``"scalar"``, ``"vector"``, or
-    ``"auto"`` (the default — vector from P >= 8; overridable per
-    process via the ``REPRO_SCHED_BACKEND`` environment variable).  All
-    backends are bit-identical, so this is purely a performance knob;
-    ``submit``/``submit_many``/``update`` accept a per-call override.
+    backend (:mod:`repro.core.backends`): ``"scalar"``, ``"vector"``,
+    ``"pallas"`` (opt-in device kernel, requires jax), or ``"auto"``
+    (the default — vector from P >= 8; overridable per process via the
+    ``REPRO_SCHED_BACKEND`` environment variable).  The NumPy backends
+    are bit-identical and pallas decision-identical, so this is a
+    performance knob; ``submit``/``submit_many``/``update`` accept a
+    per-call override.  An explicit backend incompatible with the
+    session topology raises :class:`~.backends.BackendCompatError` at
+    resolve time, leaving the session's caches untouched.
     """
 
     def __init__(self, topology: Topology, policy: Optional[Policy] = None,

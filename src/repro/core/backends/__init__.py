@@ -8,40 +8,56 @@ over all P processors is a :class:`CandidateEvaluator`:
     from the PR-1 engine; the bit-exactness reference.
   * ``"vector"`` — :class:`VectorBackend`, (P,)-batch NumPy array ops;
     bit-identical to scalar, faster from P >= ~8.
+  * ``"pallas"`` — :class:`~.pallas.PallasBackend`, the JAX/Pallas
+    device backend: all P candidates of one decision evaluated in a
+    single Pallas kernel over device-resident route tensors and link
+    state (interpret mode on CPU-only hosts).  Opt-in — ``"auto"``
+    never selects it — and imported lazily so the NumPy backends work
+    without jax installed.
   * ``"auto"``  — resolves per instance: vector when ``P >= 8`` and the
     topology is vector-compatible, scalar otherwise.
 
 The environment variable ``REPRO_SCHED_BACKEND`` overrides the *default*
 (used when a caller passes ``backend=None``); explicit ``backend=``
-arguments always win.  CI runs the tier-1 suite under both backends via
-this variable.
+arguments always win.  CI runs the tier-1 suite under all three backends
+via this variable.
+
+Backend/topology compatibility is validated *at resolve time*: an
+explicit ``backend="vector"`` on a topology whose routes revisit a link
+raises :class:`BackendCompatError` before any session state (plan/trace
+caches, compiled instances) is touched, not mid-``submit``.
 
 Adding a backend is one file: subclass :class:`CandidateEvaluator`,
 implement ``_alloc``/``evaluate``, and register the class here — policy
 code, the session API, traces, and the benchmarks pick it up through the
-``backend=`` string.  This is the extension point for an accelerator
-(JAX/Pallas) batch backend.
+``backend=`` string.  The shared route-tensor layout precompute lives in
+:mod:`.layout` (built once per instance, reused by every array backend).
 """
 from __future__ import annotations
 
+import importlib.util
 import os
 from typing import Dict, Optional, Type
 
-from .base import CandidateEvaluator, Decision
+from .base import BackendCompatError, CandidateEvaluator, Decision
 from .scalar import ScalarBackend
-from .vector import BackendCompatError, VectorBackend
+from .vector import VectorBackend
 
 __all__ = [
     "CandidateEvaluator", "Decision", "ScalarBackend", "VectorBackend",
-    "BackendCompatError", "BACKENDS", "AUTO_VECTOR_MIN_P",
-    "available_backends", "default_backend", "resolve_backend_name",
-    "vector_compatible",
+    "BackendCompatError", "BACKENDS", "AUTO_VECTOR_MIN_P", "PALLAS",
+    "available_backends", "backend_class", "default_backend",
+    "resolve_backend_name", "vector_compatible",
 ]
 
 BACKENDS: Dict[str, Type[CandidateEvaluator]] = {
     ScalarBackend.name: ScalarBackend,
     VectorBackend.name: VectorBackend,
 }
+
+# The device backend is registered lazily on first use: importing it
+# pulls in jax, which must stay optional for the NumPy-only install.
+PALLAS = "pallas"
 
 # "auto" switches to the batched backend where the (P,)-vector ops
 # amortize their per-call overhead (measured in benchmarks/exp7).
@@ -50,8 +66,28 @@ AUTO_VECTOR_MIN_P = 8
 _ENV_VAR = "REPRO_SCHED_BACKEND"
 
 
+def _pallas_available() -> bool:
+    return importlib.util.find_spec("jax") is not None
+
+
 def available_backends() -> list:
-    return sorted(BACKENDS)
+    names = set(BACKENDS)
+    if _pallas_available():
+        names.add(PALLAS)
+    return sorted(names)
+
+
+def backend_class(name: str) -> Type[CandidateEvaluator]:
+    """The evaluator class for a *resolved* backend name (lazy-imports
+    the Pallas backend on first use)."""
+    cls = BACKENDS.get(name)
+    if cls is None and name == PALLAS:
+        from .pallas import PallasBackend     # deferred jax import
+        BACKENDS[PALLAS] = cls = PallasBackend
+    if cls is None:
+        raise ValueError(f"unknown backend {name!r}; available: "
+                         f"{available_backends()} or 'auto'")
+    return cls
 
 
 def default_backend() -> str:
@@ -79,8 +115,12 @@ def resolve_backend_name(backend: Optional[str], P: int, tg) -> str:
 
     ``None`` means "the default" (env override or auto); ``"auto"``
     picks vector for ``P >= AUTO_VECTOR_MIN_P`` on vector-compatible
-    topologies.  Explicit names are validated (an explicit ``"vector"``
-    on an incompatible topology raises when the backend is built).
+    topologies (never pallas — the device backend is opt-in).  Explicit
+    names are validated here, *before* any session state is built: an
+    unknown name raises ``ValueError``, and an explicit ``"vector"`` on
+    a link-reuse topology raises :class:`BackendCompatError` at resolve
+    time so the caller's plan/trace caches are never keyed for a plan
+    that cannot materialize.
     """
     if backend is None:
         backend = default_backend()
@@ -88,7 +128,19 @@ def resolve_backend_name(backend: Optional[str], P: int, tg) -> str:
         if P >= AUTO_VECTOR_MIN_P and vector_compatible(tg):
             return VectorBackend.name
         return ScalarBackend.name
-    if backend not in BACKENDS:
+    if backend not in BACKENDS and backend != PALLAS:
         raise ValueError(f"unknown backend {backend!r}; available: "
                          f"{available_backends()} or 'auto'")
+    if backend == VectorBackend.name and not vector_compatible(tg):
+        raise BackendCompatError(
+            "a route of this topology visits a link twice; the vector "
+            "backend's batched scatter needs link-disjoint routes — "
+            "use backend='scalar'")
+    if backend == PALLAS and PALLAS not in BACKENDS \
+            and not _pallas_available():
+        # the find_spec probe runs only until the backend class is
+        # registered (backend_class caches it on first build)
+        raise ValueError("backend='pallas' requires jax (pip install "
+                         "\"jax[cpu]\"); use backend='vector' or "
+                         "'scalar' on jax-free installs")
     return backend

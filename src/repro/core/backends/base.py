@@ -35,6 +35,17 @@ if TYPE_CHECKING:                                   # pragma: no cover
 
 _INF = float("inf")
 
+
+class BackendCompatError(ValueError):
+    """The instance's topology cannot be expressed by this backend.
+
+    Raised eagerly by :func:`~..backends.resolve_backend_name` when an
+    explicit backend request is incompatible with the topology (so no
+    session/plan cache is ever keyed for a plan that cannot be built),
+    and defensively by backend constructors.
+    """
+
+
 # What `evaluate` returns: the DecisionRecord tail plus the decision's
 # alpha crossing-bound contribution (inf when not tracking):
 #   (proc, est, eft, msgs, cand_A, cand_B, bound_contrib)

@@ -1,0 +1,191 @@
+"""Shared route-tensor layout precompute for the array backends.
+
+The batched backends (NumPy :class:`~.vector.VectorBackend`, Pallas
+:class:`~.pallas.PallasBackend`) evaluate all P placement candidates of
+one dequeued task at once, which requires the topology's route tables in
+tensor form: per hop, a ``(P,)`` row of link ids / gather indices /
+speeds per destination lane.  Those tensors are a pure function of
+``(topology, source processor)`` — the message *edge* only contributes a
+scalar volume ``tpl(e_ij | src)`` that scales the per-hop CTML row — so
+they are built **once per (instance, src)** here and shared by
+
+  * every edge whose source task sits on ``src`` (the vector backend
+    used to rebuild them per ``(edge, src)``, which made a cold submit
+    cost ~2x a warm pass at n = 500 — the per-edge work is now one
+    vectorized CTML fill over the shared layout), and
+  * every backend bound to the same :class:`~..engine.CompiledInstance`
+    (the cache lives on the instance, not the backend).
+
+Bit-exactness: :func:`edge_ct` performs the same IEEE-754 operations as
+the scalar ``CompiledInstance.msg_plans_for`` path — one ``tpl / speed``
+division per hop plus the Eq. 15 quantization (``round`` is IEEE
+round-half-even in both ``float(round(t))`` and ``np.rint``; ``ceil``
+likewise) — elementwise over the layout tensors, so the produced CTML
+floats equal the scalar plan cache's bit for bit
+(``tests/test_backend_equivalence.py`` holds all backends to it).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_NEG_INF = float("-inf")
+
+
+class SrcLayout:
+    """Padded route tensors of one source processor against a topology.
+
+    Hop tensors are ``(P, R, H)`` — destination lane x route x hop —
+    where ``R``/``H`` are the maximum route count / hop count over all
+    destinations for this source.  Padding conventions (shared contract
+    of every array backend):
+
+      * hop padding (``pad``): no real link — reads must see ``-inf``
+        and the CTML must be ``-inf`` so both Eq. 13/14 running maxima
+        are no-ops;
+      * route padding (``invalid``): masked to ``+inf`` arrival so it
+        never wins the (LFT, hops, index) route selection;
+      * the ``src`` destination lane owns a fake zero-CTML route 0 whose
+        final LFT is exactly ``aft_i`` — the scalar path's
+        same-processor arrival contribution — so no post-hoc masking.
+
+    ``read_idx``/``base_idx``/``write_idx`` (and the contiguous
+    ``av_idx``/``base_flat``/``w_rows`` forms used by the vector
+    backend's single-route fast path) address the vector backend's flat
+    ``(P*L + 2,)`` lane buffer: slot ``P*L`` is the write-only sink,
+    slot ``P*L + 1`` the read-only ``-inf``; the committed ``(L + 1,)``
+    link state uses slot ``L`` as its ``-inf``.
+    """
+
+    __slots__ = ("src", "P", "L", "R", "H", "lid", "spd", "pad",
+                 "nhops", "invalid", "has_invalid", "route_meta",
+                 "read_idx", "base_idx", "write_idx",
+                 "av_idx", "base_flat", "w_rows",
+                 "spd_rows", "pad_flat", "ct_table")
+
+    def __init__(self, inst, src: int) -> None:
+        P = inst.P
+        L = inst._n_links
+        self.src, self.P, self.L = src, P, L
+        routes = inst._routes
+        R = H = 1
+        route_meta: List[List[Tuple[Tuple[int, ...], Tuple[str, ...]]]] = []
+        for dst in range(P):
+            if dst == src:
+                route_meta.append([])
+                continue
+            rr = routes[(src, dst)]
+            meta = []
+            for (lids, _spds, robj) in rr:
+                meta.append((lids, robj))
+                H = max(H, len(lids))
+            R = max(R, len(rr))
+            route_meta.append(meta)
+        self.R, self.H = R, H
+        self.route_meta = route_meta
+
+        sink = P * L
+        neg = P * L + 1
+        lid = np.full((P, R, H), L, dtype=np.intp)      # L = virtual pad link
+        spd = np.ones((P, R, H), dtype=np.float64)
+        pad = np.ones((P, R, H), dtype=bool)
+        read_idx = np.full((P, R, H), neg, dtype=np.intp)
+        base_idx = np.full((P, R, H), L, dtype=np.intp)  # L = -inf slot
+        write_idx = np.full((P, R, H), sink, dtype=np.intp)
+        nhops = np.zeros((P, R), dtype=np.int64)
+        invalid = np.ones((P, R), dtype=bool)
+        for dst in range(P):
+            if dst == src:
+                invalid[dst, 0] = False      # fake zero-CTML route
+                continue
+            for r, (lids, spds, _robj) in enumerate(routes[(src, dst)]):
+                invalid[dst, r] = False
+                nhops[dst, r] = len(lids)
+                for h, l in enumerate(lids):
+                    lid[dst, r, h] = l
+                    spd[dst, r, h] = spds[h]
+                    pad[dst, r, h] = False
+                    read_idx[dst, r, h] = dst * L + l
+                    base_idx[dst, r, h] = l
+                    write_idx[dst, r, h] = dst * L + l
+        self.lid, self.spd, self.pad = lid, spd, pad
+        self.nhops, self.invalid = nhops, invalid
+        self.has_invalid = bool(invalid.any())
+        self.read_idx, self.base_idx, self.write_idx = (read_idx, base_idx,
+                                                        write_idx)
+        # contiguous single-route forms (hop-major) for the R == 1 path
+        self.av_idx = np.ascontiguousarray(read_idx[:, 0, :].T).ravel()
+        self.base_flat = np.ascontiguousarray(base_idx[:, 0, :].T).ravel()
+        self.w_rows = [np.ascontiguousarray(write_idx[:, 0, h])
+                       for h in range(H)]
+        # per-edge CTML fill helpers (edge_ct): hop-major speeds for the
+        # single-route path, flat pad indices for either shape
+        if R == 1:
+            self.spd_rows = np.ascontiguousarray(spd[:, 0, :].T)  # (H, P)
+            self.pad_flat = np.flatnonzero(pad[:, 0, :].T.ravel())
+        else:
+            self.spd_rows = None
+            self.pad_flat = np.flatnonzero(pad.ravel())
+        self.ct_table = None         # all-edge CTML table, built lazily
+
+
+def src_layout(inst, src: int) -> SrcLayout:
+    """The (cached) :class:`SrcLayout` of ``src`` for one instance.
+
+    The cache lives on the :class:`~..engine.CompiledInstance`
+    (``inst._src_layouts``) so every backend bound to the instance —
+    and every edge — shares one build.
+    """
+    lay = inst._src_layouts.get(src)
+    if lay is None:
+        lay = SrcLayout(inst, src)
+        inst._src_layouts[src] = lay
+    return lay
+
+
+def ensure_ct_table(inst, lay: SrcLayout) -> np.ndarray:
+    """Eq. 15 CTML tensors of *every* edge from ``lay.src``, in one shot.
+
+    Route-tensor precompilation: the first decision that places a task
+    on ``src`` pays one vectorized ``(E, ...)`` division + quantization
+    over all E graph edges, and every later edge evaluated from ``src``
+    is a table row view — so a cold submit does per-*src* work (P of
+    them), not per-(edge, src) work (O(E * P) of them).
+
+    Identical floats to the scalar ``msg_plans_for`` path: ``tpl /
+    speed`` is one IEEE division either way, ``np.rint``/``np.ceil``
+    match ``float(round(t))`` / ``float(np.ceil(t))`` elementwise.
+
+    Row shape follows the backend fast paths: hop-major ``(H, P)`` for
+    single-route layouts, the full ``(P, R, H)`` tensor otherwise.
+    ~``E * P * R * H`` doubles per source processor — a few MB at the
+    exp7 n=500 scale.
+    """
+    t = inst._tpl_matrix[:, lay.src]                         # (E,)
+    single = lay.R == 1
+    if single:
+        ct = t[:, None, None] / lay.spd_rows                 # (E, H, P)
+    else:
+        ct = t[:, None, None, None] / lay.spd                # (E, P, R, H)
+    mode = inst._ctml_mode
+    if mode == "round":
+        np.rint(ct, out=ct)
+    elif mode == "ceil":
+        np.ceil(ct, out=ct)
+    ct.reshape(len(t), -1)[:, lay.pad_flat] = _NEG_INF
+    if single:
+        ct[:, :, lay.src] = 0.0      # fake route: final LFT == aft_i
+    else:
+        ct[:, lay.src, 0, :] = 0.0
+    lay.ct_table = ct
+    return ct
+
+
+def edge_ct(inst, lay: SrcLayout, i: int, j: int) -> np.ndarray:
+    """CTML tensor of edge ``e_ij`` from ``lay.src`` — a row view of the
+    precompiled all-edge table (see :func:`ensure_ct_table`)."""
+    tab = lay.ct_table
+    if tab is None:
+        tab = ensure_ct_table(inst, lay)
+    return tab[inst._edge_index[(i, j)]]

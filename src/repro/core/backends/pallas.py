@@ -1,0 +1,364 @@
+"""JAX/Pallas candidate-evaluation backend: one device kernel per decision.
+
+Evaluates all ``P`` placement candidates of one dequeued task in a
+single :func:`pallas_call`.  The route tensors (hop one-hot masks over
+the link axis, CTML rows, route validity/hop counts — all derived from
+the shared :mod:`.layout` precompute) and the committed link state live
+as device arrays; per decision the kernel
+
+  1. broadcasts the committed ``(L,)`` link state into a ``(P, L)``
+     *lane buffer* (lane ``p`` = candidate processor ``p``'s tentative
+     link state),
+  2. walks the task's predecessors in the scalar reference's
+     ``(aft, id)`` order; per predecessor it runs the Eq. 13-14
+     recurrences as **masked row ops** — ``avail_h`` is a masked max
+     over the link axis, ``LST``/``LFT`` are running ``(P,)`` maxima —
+     selects the best route per lane by the lexicographic
+     ``(LFT, hops, index)`` rule, and commits the winning route's hop
+     LFTs back into the lane buffer (masked writes),
+  3. batches Eqs. 10-12 and Defs. 4.1-4.2 over all lanes and picks the
+     strict lexicographic ``(value, EFT, proc)`` argmin winner.
+
+The host decision layer receives the winner tuple plus the winner's
+per-hop ``(LST, LFT)`` rows (for ``MessagePlacement``/trace records)
+and the per-candidate linear coefficients ``(A_p, B_p)`` for the alpha
+crossing bound, which is evaluated by the *shared* scalar
+:meth:`~.base.CandidateEvaluator.crossing`.  Committing a decision
+updates the host mirrors through the shared scalar ``apply`` and the
+device link state through an exact scatter-``max`` — so the device copy
+stays bit-equal to the host mirror between decisions and trace replay
+works unchanged (traces remain backend-portable).
+
+Precision: all arrays are ``float64``, enabled *scopedly* via
+``jax.experimental.enable_x64()`` so importing this backend does not
+flip the process-global x64 flag.  On CPU-only hosts (CI) the kernel
+runs in interpreter mode (``pallas_call(..., interpret=True)``, forced
+on/off by ``REPRO_PALLAS_INTERPRET=1/0``); there every operation is the
+same IEEE-754 double arithmetic as the scalar reference — in practice
+bit-identical, asserted decision-identical with float-tolerance
+makespans (``tests/test_backend_equivalence.py``).  A compiled TPU run
+would execute in ``float32`` (TPUs have no f64) with tile-padded
+shapes; that relaxes the contract to decision-identity modulo f32
+rounding and is not exercised by the tier-1 suite.
+
+Unlike the NumPy vector backend, masked per-hop reads/writes do not
+require link-disjoint routes: hops are walked sequentially, so a route
+may revisit a link.
+
+Per-decision dispatch cost is high (one kernel launch plus the stacked
+route tensors of the task's predecessors); this backend is the
+correctness-first device groundwork, opt-in via ``backend="pallas"``
+(``"auto"`` never selects it).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .base import CandidateEvaluator, Decision
+from .layout import SrcLayout, edge_ct, src_layout
+
+_INF = float("inf")
+_NEG_INF = float("-inf")
+
+
+# jitted kernel wrappers keyed by the static shape signature: instances
+# with the same padded dims share one trace/compile (a fresh jit wrapper
+# per backend instance would re-trace the kernel for every graph)
+_RUN_CACHE: Dict[Tuple[int, int, int, int, int, bool], object] = {}
+
+
+def _use_interpret() -> bool:
+    """Interpreter-mode fallback: compiled Mosaic kernels need a TPU;
+    everywhere else (CPU CI runners, GPU hosts) the kernel runs under
+    the Pallas interpreter.  ``REPRO_PALLAS_INTERPRET=1/0`` forces."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _decision_kernel(aft_ref, ct_ref, masks_ref, valid_ref, nhops_ref,
+                     lf_ref, pf_ref, comp_ref, ldet_ref, bp_ref, lop_ref,
+                     win_ref, est_ref, eft_ref, a_ref, b_ref,
+                     lst_ref, lft_ref, bestr_ref,
+                     *, K: int, R: int, H: int, P: int, L: int):
+    """All-candidate evaluation of one decision (see module docstring).
+
+    Static shapes: K padded predecessors x R padded routes x H padded
+    hops; predecessor/route/hop loops unroll at trace time.  Padding is
+    arithmetic, not control flow: padded hops read ``-inf`` and add
+    ``-inf`` CTML (the running maxima ignore them), padded routes mask
+    to ``+inf`` arrival, padded predecessors carry ``aft = -inf`` and
+    all-zero commit masks, so every padded contribution is a no-op of
+    the exact max algebra.
+    """
+    neg = jnp.array(_NEG_INF, dtype=lf_ref.dtype)
+    # lane buffer: every candidate lane starts from the committed state
+    lane = jnp.broadcast_to(lf_ref[:], (P, L))
+    arrival = jnp.full((P,), _NEG_INF, dtype=lf_ref.dtype)
+    for k in range(K):
+        aft_i = aft_ref[k]
+        r_lst = []
+        r_lft = []
+        r_final = []
+        for r in range(R):
+            lst = lft = None
+            lsts = []
+            lfts = []
+            for h in range(H):
+                m = masks_ref[k, r, h]                       # (P, L) one-hot
+                avail = jnp.max(jnp.where(m > 0, lane, neg), axis=1)
+                lst = jnp.maximum(avail, aft_i) if h == 0 \
+                    else jnp.maximum(lst, avail)             # Eq. 13
+                x = lst + ct_ref[k, r, h]
+                lft = x if h == 0 else jnp.maximum(lft, x)   # Eq. 14
+                lsts.append(lst)
+                lfts.append(lft)
+            r_lst.append(lsts)
+            r_lft.append(lfts)
+            r_final.append(jnp.where(valid_ref[k, r] > 0, lft, _INF))
+        # lexicographic (LFT, hops, route-index) min per lane
+        best_f = r_final[0]
+        best_nh = nhops_ref[k, 0]
+        best_r = jnp.zeros((P,), jnp.int32)
+        for r in range(1, R):
+            f = r_final[r]
+            nh = nhops_ref[k, r]
+            better = (f < best_f) | ((f == best_f) & (nh < best_nh))
+            best_f = jnp.where(better, f, best_f)
+            best_nh = jnp.where(better, nh, best_nh)
+            best_r = jnp.where(better, jnp.int32(r), best_r)
+        # commit the selected route per lane; LFT_h >= avail_h, so a
+        # masked overwrite reproduces the scalar "write if greater"
+        for h in range(H):
+            sel_lst = r_lst[0][h]
+            sel_lft = r_lft[0][h]
+            sel_m = masks_ref[k, 0, h]
+            for r in range(1, R):
+                pick = best_r == r
+                sel_lst = jnp.where(pick, r_lst[r][h], sel_lst)
+                sel_lft = jnp.where(pick, r_lft[r][h], sel_lft)
+                sel_m = jnp.where(pick[:, None], masks_ref[k, r, h], sel_m)
+            lane = jnp.where(sel_m > 0, sel_lft[:, None], lane)
+            lst_ref[k, h, :] = sel_lst
+            lft_ref[k, h, :] = sel_lft
+        bestr_ref[k, :] = best_r
+        arrival = jnp.maximum(arrival, best_f)
+
+    # ---- batched Eqs. 10-12 + Defs. 4.1-4.2 over all P lanes ----
+    est = jnp.maximum(arrival, pf_ref[:])                    # Eqs. 10-11
+    eft = est + comp_ref[:]                                  # Eq. 12
+    a = eft * ldet_ref[:]
+    value = a * bp_ref[:]        # Def. 4.1 (exit tasks: ldet = bp = 1)
+    b = a * lop_ref[:]
+    # strict lexicographic (value, eft, proc) argmin, first-index ties
+    vmin = jnp.min(value)
+    tie = value == vmin
+    emin = jnp.min(jnp.where(tie, eft, _INF))
+    tie &= eft == emin
+    idx = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)[:, 0]
+    win_ref[0] = jnp.min(jnp.where(tie, idx, jnp.int32(P)))
+    est_ref[:] = est
+    eft_ref[:] = eft
+    a_ref[:] = a
+    b_ref[:] = b
+
+
+def _compiled_run(K: int, R: int, H: int, P: int, L: int,
+                  interpret: bool):
+    key = (K, R, H, P, L, interpret)
+    run = _RUN_CACHE.get(key)
+    if run is not None:
+        return run
+    kern = functools.partial(_decision_kernel, K=K, R=R, H=H, P=P, L=L)
+    f64, i32 = jnp.float64, jnp.int32
+    out_shape = (
+        jax.ShapeDtypeStruct((1,), i32),         # winner lane
+        jax.ShapeDtypeStruct((P,), f64),         # est
+        jax.ShapeDtypeStruct((P,), f64),         # eft
+        jax.ShapeDtypeStruct((P,), f64),         # cand_A
+        jax.ShapeDtypeStruct((P,), f64),         # cand_B
+        jax.ShapeDtypeStruct((K, H, P), f64),    # selected LST
+        jax.ShapeDtypeStruct((K, H, P), f64),    # selected LFT
+        jax.ShapeDtypeStruct((K, P), i32),       # selected route
+    )
+    call = pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)
+
+    def run(cts, masks, valids, nhopss, aft, lf, pf, comp, ldet, bp, lop):
+        return call(aft, jnp.stack(cts), jnp.stack(masks),
+                    jnp.stack(valids), jnp.stack(nhopss),
+                    lf, pf, comp, ldet, bp, lop)
+
+    run = jax.jit(run)
+    _RUN_CACHE[key] = run
+    return run
+
+
+class PallasBackend(CandidateEvaluator):
+    """Device-batched candidate evaluation: one Pallas kernel/decision."""
+
+    name = "pallas"
+
+    def __init__(self, inst) -> None:
+        super().__init__(inst)
+        self._interpret = _use_interpret()
+        P = inst.P
+        self._L = L = max(1, inst._n_links)
+        # instance-global padded dims so per-pred tensors stack
+        lays = [src_layout(inst, s) for s in range(P)]
+        self._R = R = max(l.R for l in lays)
+        self._H = H = max(l.H for l in lays)
+        self._K = K = max([1] + [len(p) for p in inst._preds])
+        self._f64 = jnp.float64
+        self._src_dev: Dict[int, Tuple[jax.Array, jax.Array, jax.Array]] = {}
+        self._ct_dev: Dict[Tuple[int, int, int], jax.Array] = {}
+        with jax.experimental.enable_x64():
+            # padding predecessor: aft = -inf, zero masks, -inf CTML, one
+            # valid zero-hop route -> arrival/commit no-ops
+            pad_ct = np.full((R, H, P), _NEG_INF)
+            pad_valid = np.zeros((R, P))
+            pad_valid[0] = 1.0
+            self._pad = (jnp.asarray(pad_ct),
+                         jnp.zeros((R, H, P, L), self._f64),
+                         jnp.asarray(pad_valid),
+                         jnp.zeros((R, P), self._f64))
+            self._run = _compiled_run(K, R, H, P, L, self._interpret)
+
+    # ------------------------------------------------------------- state
+    def _alloc(self) -> None:
+        inst = self.inst
+        P, L = inst.P, self._L
+        self.link_free = np.zeros(L, dtype=np.float64)   # host mirror
+        self.proc_free = np.zeros(P, dtype=np.float64)
+        self.loads = np.zeros(P, dtype=np.float64)
+        self._lop = np.zeros(P, dtype=np.float64)
+        self._bp = np.ones(P, dtype=np.float64)
+        self._ones = np.ones(P, dtype=np.float64)
+        with jax.experimental.enable_x64():
+            self._lf_dev = jnp.zeros(L, dtype=self._f64)
+
+    def apply(self, j: int, p: int, est: float, eft: float,
+              msgs: list) -> None:
+        super().apply(j, p, est, eft, msgs)      # host mirrors (shared code)
+        lop = self.loads[p] / self.period
+        self._lop[p] = lop
+        self._bp[p] = 1.0 + lop * self.alpha
+        if msgs:
+            # scatter-commit on device: max is exact, duplicates fold in
+            # commit order, so the device copy stays bit-equal to the
+            # host mirror — works for fresh decisions and trace replay
+            lids = [lid for (_i, _r, iv) in msgs for (lid, _s, _f) in iv]
+            lfts = [f for (_i, _r, iv) in msgs for (_l, _s, f) in iv]
+            with jax.experimental.enable_x64():
+                self._lf_dev = self._lf_dev.at[jnp.asarray(lids)].max(
+                    jnp.asarray(lfts, dtype=self._f64))
+
+    # ----------------------------------------------------- device consts
+    def _src_tensors(self, src: int):
+        """One-hot hop masks + route validity/hop counts of ``src``,
+        padded to the instance-global (R, H) and device-resident."""
+        dev = self._src_dev.get(src)
+        if dev is None:
+            lay = src_layout(self.inst, src)
+            P, L, R, H = lay.P, self._L, self._R, self._H
+            masks = np.zeros((R, H, P, L))
+            for dst in range(P):
+                for r in range(lay.R):
+                    for h in range(int(lay.nhops[dst, r])):
+                        masks[r, h, dst, lay.lid[dst, r, h]] = 1.0
+            valid = np.zeros((R, P))
+            valid[:lay.R] = (~lay.invalid).T
+            nhops = np.zeros((R, P))
+            nhops[:lay.R] = lay.nhops.T
+            with jax.experimental.enable_x64():
+                dev = (jnp.asarray(masks), jnp.asarray(valid),
+                       jnp.asarray(nhops))
+            self._src_dev[src] = dev
+        return dev
+
+    def _edge_tensor(self, i: int, j: int, src: int, lay: SrcLayout):
+        """Device CTML tensor (R, H, P) of edge ``e_ij`` from ``src``,
+        shaped from the shared layout table and uploaded once."""
+        ct = self._ct_dev.get((i, j, src))
+        if ct is None:
+            row = edge_ct(self.inst, lay, i, j)
+            full = np.full((self._R, self._H, lay.P), _NEG_INF)
+            if lay.R == 1:
+                full[0, :lay.H] = row                # (H, P) hop-major
+            else:
+                full[:lay.R, :lay.H] = row.transpose(1, 2, 0)  # (P, R, H)
+            with jax.experimental.enable_x64():
+                ct = jnp.asarray(full)
+            self._ct_dev[(i, j, src)] = ct
+        return ct
+
+    # ---------------------------------------------------------- evaluate
+    def evaluate(self, j: int) -> Decision:
+        inst = self.inst
+        P = inst.P
+        aft = self.aft
+        proc_of = self.proc_of
+        K = self._K
+
+        preds = inst._preds[j]
+        if len(preds) > 1:
+            preds = sorted(preds, key=lambda i: (aft[i], i))
+        srcs = [proc_of[i] for i in preds]
+        pad_ct, pad_masks, pad_valid, pad_nhops = self._pad
+        cts, masks, valids, nhopss = [], [], [], []
+        aft_row = []
+        for i, src in zip(preds, srcs):
+            m, v, nh = self._src_tensors(src)
+            cts.append(self._edge_tensor(i, j, src,
+                                         inst._src_layouts[src]))
+            masks.append(m)
+            valids.append(v)
+            nhopss.append(nh)
+            aft_row.append(aft[i])
+        for _ in range(K - len(preds)):
+            cts.append(pad_ct)
+            masks.append(pad_masks)
+            valids.append(pad_valid)
+            nhopss.append(pad_nhops)
+            aft_row.append(_NEG_INF)
+
+        exit_j = inst._is_exit[j]
+        track = self.want_bound and not exit_j
+        # exit tasks select on bare EFT (Def. 4.2): ldet = bp = 1 makes
+        # the kernel's eft * ldet * bp collapse to eft exactly
+        ldet_j = self._ones if exit_j else inst.ldet[j]
+        bp = self._ones if exit_j else self._bp
+        with jax.experimental.enable_x64():
+            out = self._run(tuple(cts), tuple(masks), tuple(valids),
+                            tuple(nhopss), jnp.asarray(aft_row),
+                            self._lf_dev, jnp.asarray(self.proc_free),
+                            jnp.asarray(inst.comp[j]), jnp.asarray(ldet_j),
+                            jnp.asarray(bp), jnp.asarray(self._lop))
+            win, est, eft, ca, cb, lst, lft, bestr = jax.device_get(out)
+        p = int(win[0])
+
+        msgs = []
+        for k, (i, src) in enumerate(zip(preds, srcs)):
+            if src == p:
+                continue
+            r = int(bestr[k, p])
+            lids, robj = inst._src_layouts[src].route_meta[p][r]
+            msgs.append((i, robj,
+                         [(lids[h], float(lst[k, h, p]),
+                           float(lft[k, h, p]))
+                          for h in range(len(lids))]))
+
+        if track:
+            ca, cb = tuple(ca.tolist()), tuple(cb.tolist())
+            contrib = self.crossing(p, ca, cb, self.alpha)
+        else:
+            ca = cb = None
+            contrib = _INF
+        return (p, float(est[p]), float(eft[p]), msgs, ca, cb, contrib)

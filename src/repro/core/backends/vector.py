@@ -36,68 +36,32 @@ selection runs on ``.tolist()`` floats (exact — tolist round-trips the
 IEEE value), and single-predecessor tasks skip the lane-buffer
 broadcast entirely by gathering straight from the committed link state.
 
-Routes are padded per ``(pred, task, src)`` to hop-major tensors: hop
-padding reads ``-inf`` and adds ``-inf`` CTML (both maxima become
-no-ops), route padding is masked to ``+inf`` arrival so it never wins
-the (LFT, hops, index) route selection.  The ``src`` lane gets a fake
-zero-CTML route whose final LFT is exactly ``aft_i`` — the scalar
-path's same-processor arrival contribution — so no post-hoc masking is
-needed.
+Routes are padded per source processor to hop-major tensors (the shared
+:mod:`.layout` precompute, built once per ``(instance, src)`` and reused
+by every edge and every array backend): hop padding reads ``-inf`` and
+adds ``-inf`` CTML (both maxima become no-ops), route padding is masked
+to ``+inf`` arrival so it never wins the (LFT, hops, index) route
+selection.  The ``src`` lane gets a fake zero-CTML route whose final
+LFT is exactly ``aft_i`` — the scalar path's same-processor arrival
+contribution — so no post-hoc masking is needed.  The only per-edge
+work left on a cold submit is one vectorized Eq. 15 CTML fill
+(:func:`.layout.edge_ct`), which is what keeps a cold pass within
+~1.2x of a warm one (``exp7.cold_submit_us``).
 
 Requires every route to visit each link at most once (true for every
 in-tree topology); otherwise :class:`BackendCompatError` is raised and
-``backend="auto"`` falls back to scalar.
+``backend="auto"`` falls back to scalar (``resolve_backend_name``
+rejects an explicit ``backend="vector"`` up front).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
-
 import numpy as np
 
-from .base import CandidateEvaluator, Decision
+from .base import BackendCompatError, CandidateEvaluator, Decision
+from .layout import ensure_ct_table, src_layout
 
 _INF = float("inf")
 _NEG_INF = float("-inf")
-
-
-class BackendCompatError(ValueError):
-    """The instance's topology cannot be expressed by this backend."""
-
-
-class _VPlan:
-    """Padded route tensors for one (pred, task, src-processor) triple.
-
-    Single-route plans (R == 1) store hop-major rows: ``ct_rows[h]`` is
-    the ``(P,)`` CTML of hop ``h`` per destination lane, ``w_rows[h]``
-    the flat commit indices, ``av_idx``/``base_idx`` the gather indices
-    into the lane buffer / the committed link state.  Multi-route plans
-    carry ``(P, R, H)`` tensors and run a generic route-selection pass.
-    """
-
-    __slots__ = ("R", "H", "nhops", "invalid", "has_invalid", "route_meta",
-                 "ct_rows", "w_rows", "av_idx", "base_idx",
-                 "ct", "read_idx", "write_idx")
-
-    def __init__(self, read_idx, write_idx, base_idx, ct, nhops, invalid,
-                 route_meta):
-        P, self.R, self.H = read_idx.shape
-        self.nhops = nhops              # (P, R) real hop count per route
-        self.invalid = invalid          # (P, R) bool: route padding
-        self.has_invalid = bool(invalid.any())
-        self.route_meta = route_meta    # dst -> [(lids, route_names), ...]
-        if self.R == 1:
-            self.ct_rows = [np.ascontiguousarray(ct[:, 0, h])
-                            for h in range(self.H)]
-            self.w_rows = [np.ascontiguousarray(write_idx[:, 0, h])
-                           for h in range(self.H)]
-            self.av_idx = np.ascontiguousarray(read_idx[:, 0, :].T).ravel()
-            self.base_idx = np.ascontiguousarray(base_idx[:, 0, :].T).ravel()
-            self.ct = self.read_idx = self.write_idx = None
-        else:
-            self.ct = ct                # (P, R, H) CTML; padding -> -inf
-            self.read_idx = read_idx    # (P, R, H) intp into the buffer
-            self.write_idx = write_idx  # (P, R, H) intp; padding -> sink
-            self.ct_rows = self.w_rows = self.av_idx = self.base_idx = None
 
 
 class VectorBackend(CandidateEvaluator):
@@ -122,7 +86,6 @@ class VectorBackend(CandidateEvaluator):
         self._tent2d = self._tent[:P * L].reshape(P, L)
         self._tent[self._sink] = 0.0         # write-only garbage slot
         self._tent[self._neg] = _NEG_INF     # read-only, never written
-        self._vplans: Dict[Tuple[int, int, int], _VPlan] = {}
 
     def _alloc(self) -> None:
         inst = self.inst
@@ -148,60 +111,14 @@ class VectorBackend(CandidateEvaluator):
         self._bp[p] = 1.0 + lop * self.alpha
 
     # ------------------------------------------------------------------
-    def _vplan(self, i: int, j: int, src: int) -> _VPlan:
-        inst = self.inst
-        P, L = inst.P, self._L
-        per_dst: List[list] = []
-        route_meta: List[list] = []
-        R = H = 1
-        for dst in range(P):
-            if dst == src:
-                per_dst.append([])
-                route_meta.append([])
-                continue
-            # shared Eq.-15 CTML source (also warms the scalar plan cache)
-            plans = inst.msg_plans_for(i, j, src, dst)
-            meta = []
-            for (lids, _cts, robj) in plans:
-                meta.append((lids, robj))
-                H = max(H, len(lids))
-            R = max(R, len(plans))
-            per_dst.append(plans)
-            route_meta.append(meta)
-        read_idx = np.full((P, R, H), self._neg, dtype=np.intp)
-        base_idx = np.full((P, R, H), L, dtype=np.intp)   # L = -inf slot
-        write_idx = np.full((P, R, H), self._sink, dtype=np.intp)
-        ct = np.full((P, R, H), _NEG_INF, dtype=np.float64)
-        nhops = np.zeros((P, R), dtype=np.int64)
-        invalid = np.ones((P, R), dtype=bool)
-        for dst in range(P):
-            if dst == src:
-                # fake zero-CTML route: final LFT == aft_i exactly, the
-                # scalar path's same-processor arrival contribution
-                ct[dst, 0, :] = 0.0
-                invalid[dst, 0] = False
-                continue
-            for r, (lids, cts, _robj) in enumerate(per_dst[dst]):
-                invalid[dst, r] = False
-                nhops[dst, r] = len(lids)
-                for h, lid in enumerate(lids):
-                    read_idx[dst, r, h] = dst * L + lid
-                    base_idx[dst, r, h] = lid
-                    write_idx[dst, r, h] = dst * L + lid
-                    ct[dst, r, h] = cts[h]
-        vp = _VPlan(read_idx, write_idx, base_idx, ct, nhops, invalid,
-                    route_meta)
-        self._vplans[(i, j, src)] = vp
-        return vp
-
-    # ------------------------------------------------------------------
     def evaluate(self, j: int) -> Decision:
         inst = self.inst
         P = inst.P
         aft = self.aft
         proc_of = self.proc_of
         tent = self._tent
-        vplans = self._vplans
+        layouts = inst._src_layouts
+        edge_index = inst._edge_index
         maximum = np.maximum
 
         preds = inst._preds[j]
@@ -217,50 +134,59 @@ class VectorBackend(CandidateEvaluator):
             i = preds[k]
             src = proc_of[i]
             aft_i = aft[i]
-            vp = vplans.get((i, j, src))
-            if vp is None:
-                vp = self._vplan(i, j, src)
-            if vp.R == 1:
+            # shared per-src layout + precompiled all-edge CTML table:
+            # nothing is built per (edge, src), so a cold pass costs the
+            # same as a warm one (modulo P one-time layout builds).
+            # This inlines layout.src_layout/edge_ct's cache-hit paths —
+            # misses delegate to the helpers, hits stay a dict lookup
+            # (this loop runs once per predecessor per decision)
+            lay = layouts.get(src)
+            if lay is None:
+                lay = src_layout(inst, src)
+            ct = lay.ct_table
+            if ct is None:
+                ct = ensure_ct_table(inst, lay)
+            ct = ct[edge_index[(i, j)]]
+            if lay.R == 1:
                 if tent_ready:
-                    av = tent.take(vp.av_idx)
+                    av = tent.take(lay.av_idx)
                 else:                            # single pred: read the
-                    av = self.link_free.take(vp.base_idx)  # base directly
-                ct_rows = vp.ct_rows
+                    av = self.link_free.take(lay.base_flat)  # base directly
                 commit = k < last                # last pred: no readers
                 lst_rows = []
                 lft_rows = []
                 lst = lft = None
-                for h in range(vp.H):
+                for h in range(lay.H):
                     avh = av[h * P:(h + 1) * P]
                     lst = maximum(avh, aft_i) if h == 0 \
                         else maximum(avh, lst)   # Eq. 13, reassociated
-                    x = lst + ct_rows[h]
+                    x = lst + ct[h]              # hop-major table row
                     lft = x if h == 0 else maximum(lft, x)   # Eq. 14
                     if commit:
                         # LFT_h >= avail_h always: plain scatter commit
-                        tent[vp.w_rows[h]] = lft
+                        tent[lay.w_rows[h]] = lft
                     lst_rows.append(lst)
                     lft_rows.append(lft)
                 finals.append(lft)
-                walks.append((i, src, vp, lst_rows, lft_rows, None))
+                walks.append((i, src, lay, lst_rows, lft_rows, None))
                 continue
             # ---- multi-route general path ----
             if not tent_ready:
                 np.copyto(self._tent2d, self._lf)
                 tent_ready = True
-            avail = tent[vp.read_idx]            # (P, R, H) gather
+            avail = tent[lay.read_idx]           # (P, R, H) gather
             lst3 = np.maximum.accumulate(avail, axis=2)
             lst3 = maximum(lst3, aft_i)
-            lft3 = np.maximum.accumulate(lst3 + vp.ct, axis=2)
+            lft3 = np.maximum.accumulate(lst3 + ct, axis=2)
             final = lft3[:, :, -1]               # (P, R) route arrivals
-            if vp.has_invalid:
-                final = np.where(vp.invalid, _INF, final)
+            if lay.has_invalid:
+                final = np.where(lay.invalid, _INF, final)
             # lexicographic (LFT, hops, route-index) min per lane
-            nhops = vp.nhops
+            nhops = lay.nhops
             best_f = final[:, 0].copy()
             best_nh = nhops[:, 0].copy()
             best_r = np.zeros(P, dtype=np.intp)
-            for r in range(1, vp.R):
+            for r in range(1, lay.R):
                 f = final[:, r]
                 better = (f < best_f) | ((f == best_f) &
                                          (nhops[:, r] < best_nh))
@@ -269,11 +195,11 @@ class VectorBackend(CandidateEvaluator):
                 best_r[better] = r
             sel = best_r[:, None, None]
             lft_sel = np.take_along_axis(lft3, sel, axis=1)[:, 0, :]
-            wi = np.take_along_axis(vp.write_idx, sel,
+            wi = np.take_along_axis(lay.write_idx, sel,
                                     axis=1)[:, 0, :].ravel()
             tent[wi] = lft_sel.ravel()
             finals.append(best_f)
-            walks.append((i, src, vp, lst3, lft3, best_r))
+            walks.append((i, src, lay, lst3, lft3, best_r))
 
         # ---- batched Eqs. 10-12 + Defs. 4.1-4.2 over all P lanes ----
         if not finals:
@@ -308,18 +234,18 @@ class VectorBackend(CandidateEvaluator):
                 p, bv, be = q, v, el[q]
 
         msgs = []
-        for (i, src, vp, lst_w, lft_w, best_r) in walks:
+        for (i, src, lay, lst_w, lft_w, best_r) in walks:
             if src == p:
                 continue
             if best_r is None:                   # hop-major rows
-                lids, robj = vp.route_meta[p][0]
+                lids, robj = lay.route_meta[p][0]
                 msgs.append((i, robj,
                              [(lids[h], float(lst_w[h][p]),
                                float(lft_w[h][p]))
                               for h in range(len(lids))]))
             else:
                 r = int(best_r[p])
-                lids, robj = vp.route_meta[p][r]
+                lids, robj = lay.route_meta[p][r]
                 msgs.append((i, robj,
                              [(lids[h], float(lst_w[p, r, h]),
                                float(lft_w[p, r, h]))

@@ -20,11 +20,13 @@ recording/replay, and :class:`~.scheduler.Schedule` assembly.  The
 *numeric layer* — per-task evaluation of all P placement candidates,
 including the sequential message-routing walks with commit/rollback link
 state — is a :class:`~repro.core.backends.CandidateEvaluator`:
-``"scalar"`` (flat Python lists, the bit-exactness reference) or
-``"vector"`` ((P,)-batch NumPy ops, the P >= 8 fast path);
-``backend="auto"`` resolves per instance.  Every backend performs IEEE
-operations whose results are bit-identical to the reference, so the
-produced :class:`~.scheduler.Schedule` is too (asserted by
+``"scalar"`` (flat Python lists, the bit-exactness reference),
+``"vector"`` ((P,)-batch NumPy ops, the P >= 8 fast path), or
+``"pallas"`` (opt-in JAX/Pallas device kernel, interpret mode on CPU);
+``backend="auto"`` resolves per instance.  The NumPy backends perform
+IEEE operations whose results are bit-identical to the reference, so
+the produced :class:`~.scheduler.Schedule` is too; the pallas backend
+is held decision-identical (asserted by
 ``tests/test_engine_equivalence.py`` and
 ``tests/test_backend_equivalence.py``).
 
@@ -62,7 +64,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backends import BACKENDS, CandidateEvaluator, resolve_backend_name
+from .backends import CandidateEvaluator, backend_class, resolve_backend_name
 from .graph import SPG
 from .ranks import ldet_cc, rank_matrix
 from .scheduler import MessagePlacement, Schedule, SchedulingFailure
@@ -153,14 +155,25 @@ class CompiledInstance:
         self.n_decisions_replayed = 0
         # candidate-evaluation backends, built lazily per name
         self._backends: Dict[str, CandidateEvaluator] = {}
+        # per-source-processor route-tensor layouts (backends/layout.py),
+        # shared by every array backend and every edge of this instance,
+        # plus the (E, P) tpl matrix / edge interning the all-edge CTML
+        # precompilation indexes by
+        self._src_layouts: Dict[int, object] = {}
+        self._edge_index: Dict[Tuple[int, int], int] = {
+            e: k for k, e in enumerate(g.edges)}
+        self._tpl_matrix = np.array(
+            [self._tpl[e] for e in g.edges]).reshape(len(g.edges), P)
 
     # ------------------------------------------------------------------
     def msg_plans_for(self, i: int, j: int, src: int, dst: int) -> list:
         """Cached per-route ``(link_ids, CTMLs, route_names)`` for message
-        ``e_ij`` travelling ``src -> dst`` — the single source of Eq. 15
-        CTML quantization for every backend (the cross-backend
-        bit-identity contract depends on all of them quantizing through
-        this one code path)."""
+        ``e_ij`` travelling ``src -> dst`` — the scalar backend's Eq. 15
+        CTML source.  The array backends quantize the same values
+        vectorized in ``backends/layout.py`` (``ensure_ct_table``);
+        the two code paths must stay elementwise bit-identical — change
+        quantization in BOTH or ``tests/test_backend_equivalence.py``
+        will say so."""
         key = (i, j, src, dst)
         plans = self._msg_plans.get(key)
         if plans is None:
@@ -189,7 +202,7 @@ class CompiledInstance:
         name = resolve_backend_name(backend, self.P, self.tg)
         be = self._backends.get(name)
         if be is None:
-            be = BACKENDS[name](self)
+            be = backend_class(name)(self)
             self._backends[name] = be
         return be
 

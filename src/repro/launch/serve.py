@@ -16,6 +16,10 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--sched-backend", type=str, default=None,
+                    choices=["auto", "scalar", "vector", "pallas"],
+                    help="candidate-evaluation backend for the DSMS "
+                         "static scheduler (DESIGN.md §5)")
     args = ap.parse_args()
 
     import jax
@@ -32,7 +36,7 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no serve step")
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = DSMSEngine(cfg, params, batch_size=args.batch,
-                     max_seq=args.max_seq)
+                     max_seq=args.max_seq, backend=args.sched_backend)
     eng.register(Query("argmax_conf",
                        mandatory=lambda lg: jnp.max(
                            jax.nn.softmax(lg[:, -1]), -1)))

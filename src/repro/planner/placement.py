@@ -11,6 +11,8 @@ shared bus with real contention).
 and returns assignments + predicted step makespans.  Re-planning with
 measured rates is the framework's straggler-mitigation path: static
 re-scheduling, exactly the paper's answer for time-predictable systems.
+``backend=`` threads through to the engine's candidate-evaluation layer
+("auto"/"scalar"/"vector"/"pallas" — see DESIGN.md §5).
 """
 from __future__ import annotations
 

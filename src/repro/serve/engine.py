@@ -72,7 +72,8 @@ class DSMSEngine:
         self.topology = tpu_slice_topology(n_slices=n_slices,
                                            chips_per_slice=4, pods=1)
         # backend: candidate-evaluation backend for the static scheduler
-        # ("auto" picks the (P,)-vector path on wide slice topologies)
+        # ("auto" picks the (P,)-vector path on wide slice topologies;
+        # "pallas" opts into the device kernel — see DESIGN.md §5)
         self.scheduler = Scheduler(
             self.topology, policy=HVLB_CC_IC(alpha_max=2.0, alpha_step=0.1),
             backend=backend)

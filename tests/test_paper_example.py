@@ -8,6 +8,11 @@ from repro.core import (PAPER_COMP_EXP5, paper_spg, paper_topology,
 from repro.core.ranks import (hprv_a, hprv_b, hrank, priority_queue,
                               rank_matrix)
 
+# shims called deliberately; their warning is pinned by
+# tests/test_deprecation.py (keeps -W error::DeprecationWarning clean)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:schedule_h:DeprecationWarning")
+
 # Table 2 of the paper (rank per processor, hrank).
 TABLE2_RANK_P1 = [145.0, 133.0, 109.0, 109.0, 85.0, 50.0, 67.0, 48.0, 20.0, 15.0]
 TABLE2_RANK_P2 = [81.66, 74.99, 61.66, 61.66, 48.33, 29.67, 38.33, 28.0, 13.0, 10.0]

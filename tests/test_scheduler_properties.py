@@ -15,6 +15,11 @@ from repro.core.scheduler import list_schedule
 SETTINGS = settings(max_examples=25, deadline=None,
                     suppress_health_check=[HealthCheck.too_slow])
 
+# shims called deliberately; their warning is pinned by
+# tests/test_deprecation.py (keeps -W error::DeprecationWarning clean)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:schedule_h:DeprecationWarning")
+
 
 def _graph(seed, n, ccr=1.0, constrained=True):
     rng = np.random.default_rng(seed)
