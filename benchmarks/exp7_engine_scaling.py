@@ -21,11 +21,21 @@ Measures scheduler latency for n in {50, 100, 200, 500} tasks on P in
                           where the per-(edge, src) builds used to
                           cost ~2x),
   * ``pallas_schedule_us`` — the same pass on the JAX/Pallas device
-                          backend in interpreter mode (n=50 rows only,
-                          skipped when jax is not installed;
-                          ``derived`` = scalar/pallas ratio — well
-                          below 1 under the interpreter, tracked for
-                          the day a compiled device path exists),
+                          backend in interpreter mode with ``batch=1``
+                          (the PR-4 per-decision dispatch baseline;
+                          n=50 rows only, skipped when jax is not
+                          installed; ``derived`` = scalar/pallas ratio
+                          — well below 1 under the interpreter),
+  * ``pallas_batched_schedule_us`` — the level-batched pallas path
+                          (one kernel launch + one host round-trip per
+                          wave; ``derived`` = per-decision/batched
+                          speedup — what the O(levels) launch
+                          amortization buys),
+  * ``pallas_roundtrips`` — kernel launches (== blocking transfers)
+                          per batched schedule; ``derived`` =
+                          launches minus rank-level count, gated in CI
+                          at a small constant (O(levels), not
+                          O(decisions)),
   * ``sweep_us``        — a full HVLB_CC alpha sweep (alpha_max=5,
                           step=0.05) with decision-trace interval
                           skipping (``derived`` = distinct makespan
@@ -139,14 +149,37 @@ def run(full: bool = False, engine: str = "compiled",
                 rows.append(row(f"exp7.P{P}.n{n}.cold_submit_us", cold_us,
                                 cold_us / vec_us))   # cold/warm ratio
             if compiled and n == 50 and _has_jax():
-                # device backend (interpret mode off-TPU): correctness
-                # groundwork, decision-identical to scalar on the spot
+                # device backend (interpret mode off-TPU), decision-
+                # identical to scalar on the spot.  batch=1 is the PR-4
+                # per-decision dispatch kept as the honest baseline;
+                # the batched path is the shipping configuration —
+                # derived = per-decision/batched speedup, i.e. what the
+                # O(levels) launch amortization buys on this machine
                 (pallas_us,) = _min_of(2, lambda: res.__setitem__(
-                    "p", inst.schedule(q, alpha=1.0, backend="pallas")))
+                    "p", inst.schedule(q, alpha=1.0, backend="pallas",
+                                       batch=1)))
                 assert np.array_equal(res["p"].proc, s.proc)
                 assert np.allclose(res["p"].finish, s.finish)
                 rows.append(row(f"exp7.P{P}.n{n}.pallas_schedule_us",
                                 pallas_us, sched_us / pallas_us))
+                be = inst.backend_instance("pallas")
+                l0, r0 = be.n_launches, be.n_roundtrips
+                (pallas_b_us,) = _min_of(2, lambda: res.__setitem__(
+                    "pb", inst.schedule(q, alpha=1.0, backend="pallas")))
+                launches = (be.n_launches - l0) // 2     # 2 repeats
+                assert be.n_roundtrips - r0 == be.n_launches - l0
+                assert np.array_equal(res["pb"].proc, s.proc)
+                assert np.allclose(res["pb"].finish, s.finish)
+                rows.append(row(
+                    f"exp7.P{P}.n{n}.pallas_batched_schedule_us",
+                    pallas_b_us, pallas_us / pallas_b_us))
+                # host round-trips per schedule: one per wave; the gate
+                # holds derived (launches - rank levels) at O(levels),
+                # i.e. <= a small constant over the level count
+                n_levels = len(set(g.depth.tolist()))
+                rows.append(row(f"exp7.P{P}.n{n}.pallas_roundtrips",
+                                float(launches),
+                                float(launches - n_levels)))
             if compiled and n <= 100:
                 t0 = time.perf_counter()
                 ref = list_schedule(g, tg, q, r, alpha=1.0)

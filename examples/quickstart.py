@@ -60,12 +60,30 @@ print(f"\nafter drift: makespan={upd.makespan:.1f}; probe said "
 # 6. Wide clusters: on P >= 8 processors "auto" resolves to the
 #    vectorized backend; the plan records which numeric layer ran.
 #    An explicit override is per-call: sched.submit(g, backend="scalar").
-#    With jax installed, backend="pallas" (opt-in; auto never picks it)
-#    runs every decision's P-candidate evaluation in a single Pallas
-#    device kernel — interpret mode on CPU, decision-identical schedules
-#    (DESIGN.md §5).
 print(f"\nbackend on this 3-processor example: {upd.backend} "
       "(vector kicks in from P >= 8; backend='pallas' opts into the "
       "device kernel)")
+
+# 7. Device offload (requires jax): backend="pallas" (opt-in; auto
+#    never picks it) runs the engine's level-batched decision waves on
+#    a Pallas kernel — one launch evaluates a whole wave of independent
+#    tasks over all P candidates, commits winners to device-resident
+#    link/processor state in-kernel, and pays one host round-trip per
+#    wave (O(levels), not O(decisions)).  Batching is on by default;
+#    batch= caps the wave size (batch=1 is the per-decision walk) and,
+#    like backend=, keys the plan cache.  Interpret mode on CPU keeps
+#    schedules decision-identical; a TPU run compiles f32 with the
+#    documented near-tie policy (DESIGN.md §5).
+try:
+    import jax  # noqa: F401
+    pallas_sched = Scheduler(tg, backend="pallas")      # batched default
+    pp = pallas_sched.submit(g, HVLB_CC_B(alpha_max=3.0, period=150.0))
+    print(f"pallas (batched, wave cap {pp.batch}): "
+          f"makespan={pp.makespan:.1f} at alpha={pp.best_alpha:.2f} "
+          "— decision-identical to the NumPy backends")
+except (ImportError, ValueError):
+    # no jax at all, or an importable-but-broken install rejected at
+    # resolve time — either way the NumPy backends above still stand
+    print("(jax not installed — backend='pallas' needs jax[cpu])")
 
 print("\n(paper: HSV_CC=73, HVLB_CC=62 — see tests/test_paper_example.py)")

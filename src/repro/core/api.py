@@ -59,7 +59,8 @@ import numpy as np
 
 from .backends import resolve_backend_name
 from .deprecation import warn_once
-from .engine import CompiledInstance, DecisionTrace
+from .engine import (DEFAULT_BATCH_MAX, CompiledInstance, DecisionTrace,
+                     validate_batch)
 from .graph import SPG
 from .imprecise import precision as _precision
 from .imprecise import schedule_holes
@@ -178,6 +179,8 @@ class Plan:
     holes: Optional[Dict[int, float]] = None     # HVLB_CC_IC only
     replay: Optional[ReplayStats] = None
     backend: Optional[str] = None    # resolved evaluator ("reference": None)
+    batch: Optional[int] = None      # resolved level-batch cap (reference:
+    #                                  None; decisions are batch-invariant)
 
     @property
     def makespan(self) -> float:
@@ -221,6 +224,7 @@ class FleetPlan:
     period: Optional[float]
     sweep: Optional[SweepResult] = None
     backend: Optional[str] = None
+    batch: Optional[int] = None
 
     @property
     def makespan(self) -> float:
@@ -270,11 +274,13 @@ class _GraphSession:
         self.ldet = ldet_cc(g, tg, self.rank)
         self.queues: Dict[tuple, List[int]] = {}
         self.periods: Dict[Policy, float] = {}
-        # traces are shared across backends (records are backend-portable
-        # and bit-identical); plans are keyed by (policy, backend) so a
-        # per-call backend override never hands back a stale plan object
+        # traces are shared across backends and batch caps (records are
+        # backend-portable, decisions batch-invariant); plans are keyed
+        # by (policy, backend, batch) so a per-call override never hands
+        # back a stale plan object
         self.traces: Dict[Policy, Dict[float, DecisionTrace]] = {}
-        self.plans: Dict[Tuple[Policy, Optional[str]], Plan] = {}
+        self.plans: Dict[Tuple[Policy, Optional[str], Optional[int]],
+                         Plan] = {}
 
     @property
     def inst(self) -> Optional[CompiledInstance]:
@@ -370,21 +376,46 @@ class Scheduler:
     per-call override.  An explicit backend incompatible with the
     session topology raises :class:`~.backends.BackendCompatError` at
     resolve time, leaving the session's caches untouched.
+
+    ``batch`` caps the engine's level-batch size — how many independent
+    same-rank-level tasks the decision layer hands to the backend per
+    ``evaluate_batch`` wave (``None`` = the engine default,
+    :data:`~.engine.DEFAULT_BATCH_MAX`; ``1`` = strict per-decision
+    walk).  Decisions are batch-invariant, so this is purely a
+    performance knob for device backends (one kernel launch and one
+    host round-trip per wave); like ``backend`` it keys the plan cache
+    and accepts a per-call override.
     """
 
     def __init__(self, topology: Topology, policy: Optional[Policy] = None,
                  engine: str = "compiled",
-                 backend: Optional[str] = None) -> None:
+                 backend: Optional[str] = None,
+                 batch: Optional[int] = None) -> None:
         if engine not in ("compiled", "reference"):
             raise ValueError(f"unknown engine {engine!r}")
         self.topology = topology
         self.policy: Policy = HVLB_CC_B() if policy is None else policy
         self.engine = engine
         self.backend = backend
+        self.batch = validate_batch(batch)
         self._sessions: Dict[int, _GraphSession] = {}
         self._last: Optional[_GraphSession] = None
         # probe_update's dry-run state, reused by a matching update()
         self._probe: Optional[tuple] = None
+
+    def _resolve_batch(self, batch: Optional[int]) -> Optional[int]:
+        """Concrete level-batch cap for this call (None for reference —
+        the readable reference walks one decision at a time).
+
+        The value is validated (``engine.validate_batch``, the single
+        source of truth) even under the reference engine, so an invalid
+        ``batch=`` fails loudly instead of being silently ignored until
+        the session switches to the compiled engine.
+        """
+        b = self.batch if batch is None else validate_batch(batch)
+        if self.engine != "compiled":
+            return None
+        return DEFAULT_BATCH_MAX if b is None else b
 
     def _resolve_backend(self, backend: Optional[str]) -> Optional[str]:
         """Concrete evaluator name for this call (None for reference).
@@ -400,30 +431,33 @@ class Scheduler:
 
     # ------------------------------------------------------------- submit
     def submit(self, g: SPG, policy: Optional[Policy] = None,
-               backend: Optional[str] = None) -> Plan:
+               backend: Optional[str] = None,
+               batch: Optional[int] = None) -> Plan:
         """Compile (once) and schedule ``g`` under ``policy``.
 
         Re-submitting the same graph object reuses its compiled instance,
-        priority queues, and — for an unchanged (policy, backend) — the
-        cached plan.
+        priority queues, and — for an unchanged (policy, backend, batch)
+        — the cached plan.
         """
         policy = self.policy if policy is None else policy
         bname = self._resolve_backend(backend)
+        bcap = self._resolve_batch(batch)
         sess = self._sessions.get(id(g))
         if sess is None or sess.g is not g:
             sess = _GraphSession(g, self.topology,
                                  compiled=self.engine == "compiled")
             self._sessions[id(g)] = sess
         self._last = sess
-        plan = sess.plans.get((policy, bname))
+        plan = sess.plans.get((policy, bname, bcap))
         if plan is None:
-            plan = self._plan(sess, policy, backend=bname)
-            sess.plans[(policy, bname)] = plan
+            plan = self._plan(sess, policy, backend=bname, batch=bcap)
+            sess.plans[(policy, bname, bcap)] = plan
         return plan
 
     def submit_many(self, graphs: Iterable[SPG],
                     policy: Optional[Policy] = None,
-                    backend: Optional[str] = None) -> FleetPlan:
+                    backend: Optional[str] = None,
+                    batch: Optional[int] = None) -> FleetPlan:
         """Schedule several independent SPGs against shared link state in
         one engine pass (the exp6 fleet scenario).
 
@@ -440,11 +474,11 @@ class Scheduler:
             raise ValueError("submit_many needs at least one graph")
         policy = self.policy if policy is None else policy
         union, offsets = _disjoint_union(graphs, self.topology)
-        plan = self.submit(union, policy, backend=backend)
+        plan = self.submit(union, policy, backend=backend, batch=batch)
         return FleetPlan(schedule=plan.schedule, graphs=graphs,
                          offsets=offsets, policy=policy,
                          period=plan.period, sweep=plan.sweep,
-                         backend=plan.backend)
+                         backend=plan.backend, batch=plan.batch)
 
     # ------------------------------------------------------------- update
     def probe_update(self, *, task_rates: Dict[int, float],
@@ -480,7 +514,8 @@ class Scheduler:
                link_speed: Optional[Dict[str, float]] = None,
                graph: Optional[SPG] = None,
                policy: Optional[Policy] = None,
-               backend: Optional[str] = None) -> Plan:
+               backend: Optional[str] = None,
+               batch: Optional[int] = None) -> Plan:
         """Re-plan after drift, replaying only the affected trace suffix.
 
         ``task_rates`` maps task -> arrival-rate factor on its
@@ -517,7 +552,7 @@ class Scheduler:
         if not changed and not link_changed:
             self._sessions[id(sess.g)] = sess
             self._last = sess
-            return self.submit(sess.g, policy, backend=backend)
+            return self.submit(sess.g, policy, backend=backend, batch=batch)
 
         probe = self._probe
         self._probe = None
@@ -539,9 +574,11 @@ class Scheduler:
             prev_traces = sess.traces.get(policy)
 
         bname = self._resolve_backend(backend)
+        bcap = self._resolve_batch(batch)
         plan = self._plan(new_sess, policy, prev_traces=prev_traces,
-                          suffix_start=suffix_start, backend=bname)
-        new_sess.plans[(policy, bname)] = plan
+                          suffix_start=suffix_start, backend=bname,
+                          batch=bcap)
+        new_sess.plans[(policy, bname, bcap)] = plan
         # the originally submitted handle and the new graph both address
         # this session; every map entry still pointing at the superseded
         # session is evicted (else each update would leak one session)
@@ -601,7 +638,8 @@ class Scheduler:
     def _plan(self, sess: _GraphSession, policy: Policy,
               prev_traces: Optional[Dict[float, DecisionTrace]] = None,
               suffix_start: int = 0,
-              backend: Optional[str] = None) -> Plan:
+              backend: Optional[str] = None,
+              batch: Optional[int] = None) -> Plan:
         g = sess.g
         queue = sess.queue_for(self.topology, policy)
         inst = sess.inst
@@ -626,7 +664,8 @@ class Scheduler:
                 pos = suffix_start if prev is not None else 0
                 best, _, tr = inst.schedule_traced(
                     queue, 0.0, period=period, want_bound=False,
-                    resume=prev, resume_pos=pos, backend=backend)
+                    resume=prev, resume_pos=pos, backend=backend,
+                    batch=batch)
                 sess.traces[policy] = {0.0: tr}
                 sims_resumed, sims_full = (1, 0) if pos else (0, 1)
                 sweep = None
@@ -648,7 +687,7 @@ class Scheduler:
                 traces: Dict[float, DecisionTrace] = {}
                 sweep, sims_resumed, sims_full = self._sweep_compiled(
                     inst, queue, policy, period, traces,
-                    prev_traces, suffix_start, backend)
+                    prev_traces, suffix_start, backend, batch)
                 sess.traces[policy] = traces
             best = sweep.best
 
@@ -663,7 +702,7 @@ class Scheduler:
             if isinstance(policy, HVLB_CC_IC) else None
         return Plan(schedule=best, policy=policy, graph=g, period=period,
                     sweep=sweep, holes=holes, replay=replay,
-                    backend=backend)
+                    backend=backend, batch=batch)
 
     # ------------------------------------------------------------- sweeps
     def _sweep_compiled(self, inst: CompiledInstance, queue: Sequence[int],
@@ -671,7 +710,8 @@ class Scheduler:
                         traces: Dict[float, DecisionTrace],
                         prev_traces: Optional[Dict[float, DecisionTrace]],
                         suffix_start: int,
-                        backend: Optional[str] = None
+                        backend: Optional[str] = None,
+                        batch: Optional[int] = None
                         ) -> Tuple[SweepResult, int, int]:
         n_steps = int(round(policy.alpha_max / policy.alpha_step))
         counters = [0, 0]                      # [resumed, full]
@@ -687,7 +727,7 @@ class Scheduler:
             s, _, tr = inst.schedule_traced(queue, 0.0, period=period,
                                             want_bound=False,
                                             resume=prev, resume_pos=pos,
-                                            backend=backend)
+                                            backend=backend, batch=batch)
             traces[0.0] = tr
             return (SweepResult.from_points(s, 0.0, [(0.0, s.makespan)]),
                     1 if pos else 0, 0 if pos else 1)
@@ -701,7 +741,8 @@ class Scheduler:
                 counters[0 if pos else 1] += 1
                 s, bnd, tr = inst.schedule_traced(
                     queue, alpha, period=period, want_bound=True,
-                    resume=prev, resume_pos=pos, backend=backend)
+                    resume=prev, resume_pos=pos, backend=backend,
+                    batch=batch)
                 traces[alpha] = tr
                 points.append((alpha, s.makespan))
                 if best is None or s.makespan < best.makespan - 1e-12:

@@ -9,11 +9,14 @@ over all P processors is a :class:`CandidateEvaluator`:
   * ``"vector"`` — :class:`VectorBackend`, (P,)-batch NumPy array ops;
     bit-identical to scalar, faster from P >= ~8.
   * ``"pallas"`` — :class:`~.pallas.PallasBackend`, the JAX/Pallas
-    device backend: all P candidates of one decision evaluated in a
-    single Pallas kernel over device-resident route tensors and link
-    state (interpret mode on CPU-only hosts).  Opt-in — ``"auto"``
-    never selects it — and imported lazily so the NumPy backends work
-    without jax installed.
+    device backend: whole *waves* of independent decisions (the
+    engine's level batches) evaluated in one Pallas kernel launch over
+    device-resident route tensors, with in-kernel winner commits to
+    persistent device link/processor state — one host round-trip per
+    wave, O(levels) per schedule (interpret mode on CPU-only hosts,
+    f32 + tile-padded for a Mosaic compile on TPU).  Opt-in —
+    ``"auto"`` never selects it — and imported lazily so the NumPy
+    backends work without jax installed.
   * ``"auto"``  — resolves per instance: vector when ``P >= 8`` and the
     topology is vector-compatible, scalar otherwise.
 
@@ -28,7 +31,10 @@ raises :class:`BackendCompatError` before any session state (plan/trace
 caches, compiled instances) is touched, not mid-``submit``.
 
 Adding a backend is one file: subclass :class:`CandidateEvaluator`,
-implement ``_alloc``/``evaluate``, and register the class here — policy
+implement ``_alloc``/``evaluate`` (and optionally override
+``evaluate_batch`` to fuse a whole decision wave, as pallas does — the
+sequential default keeps scalar/vector bit-exact), and register the
+class here — policy
 code, the session API, traces, and the benchmarks pick it up through the
 ``backend=`` string.  The shared route-tensor layout precompute lives in
 :mod:`.layout` (built once per instance, reused by every array backend).
@@ -136,11 +142,21 @@ def resolve_backend_name(backend: Optional[str], P: int, tg) -> str:
             "a route of this topology visits a link twice; the vector "
             "backend's batched scatter needs link-disjoint routes — "
             "use backend='scalar'")
-    if backend == PALLAS and PALLAS not in BACKENDS \
-            and not _pallas_available():
-        # the find_spec probe runs only until the backend class is
-        # registered (backend_class caches it on first build)
-        raise ValueError("backend='pallas' requires jax (pip install "
-                         "\"jax[cpu]\"); use backend='vector' or "
-                         "'scalar' on jax-free installs")
+    if backend == PALLAS and PALLAS not in BACKENDS:
+        if not _pallas_available():
+            raise ValueError("backend='pallas' requires jax (pip install "
+                             "\"jax[cpu]\"); use backend='vector' or "
+                             "'scalar' on jax-free installs")
+        # Import (and register) the device backend NOW: an explicit
+        # pallas request will import jax anyway, and an importable-but-
+        # broken install (jaxlib mismatch) must fail at resolve time —
+        # before any session/plan-cache state exists — like every other
+        # invalid backend request, not mid-submit.
+        try:
+            backend_class(PALLAS)
+        except Exception as e:
+            raise ValueError(
+                "backend='pallas' requires a working jax install "
+                f"(pip install \"jax[cpu]\"): importing it failed with "
+                f"{type(e).__name__}: {e}") from e
     return backend

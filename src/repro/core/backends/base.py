@@ -28,7 +28,7 @@ as ``max``), so all backends are mutually **bit-identical**
 from __future__ import annotations
 
 import abc
-from typing import ClassVar, List, Optional, Tuple, TYPE_CHECKING
+from typing import ClassVar, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 if TYPE_CHECKING:                                   # pragma: no cover
     from ..engine import CompiledInstance
@@ -90,6 +90,37 @@ class CandidateEvaluator(abc.ABC):
         current run state and pick the winner (Eqs. 10-15, Defs. 4.1-4.2).
         Does NOT mutate run state — the caller commits via :meth:`apply`.
         """
+
+    def evaluate_batch(self, js: Sequence[int]) -> List[Decision]:
+        """Evaluate-and-commit a batch of *independent* tasks, in order.
+
+        The engine's decision layer groups consecutive same-rank-level
+        queue entries (no precedence edges inside a batch — every
+        predecessor is already committed) and hands the whole wave to the
+        backend.  Decisions inside a batch still interact through the
+        shared link/processor state, so they are evaluated and committed
+        **sequentially**; batching changes where the loop runs, never the
+        decisions.
+
+        This default runs the per-decision path verbatim — ``evaluate``
+        then :meth:`apply` per task, the exact op order of the unbatched
+        engine — so the scalar/vector backends stay bit-exact and their
+        traces trace-portable by construction.  A device backend
+        overrides this to evaluate the whole batch in one kernel launch
+        with in-kernel commits (see ``backends/pallas.py``), returning
+        the same per-task :data:`Decision` tuples.
+
+        Contract: run state after ``evaluate_batch(js)`` equals the
+        state after ``for j in js: apply(j, *evaluate(j)[:3], ...)`` up
+        to the backend's precision contract, and the returned decisions
+        are in ``js`` order.
+        """
+        decisions: List[Decision] = []
+        for j in js:
+            d = self.evaluate(j)
+            self.apply(j, d[0], d[1], d[2], d[3])
+            decisions.append(d)
+        return decisions
 
     # ------------------------------------------------------------ commit
     def apply(self, j: int, p: int, est: float, eft: float,

@@ -189,3 +189,73 @@ def edge_ct(inst, lay: SrcLayout, i: int, j: int) -> np.ndarray:
     if tab is None:
         tab = ensure_ct_table(inst, lay)
     return tab[inst._edge_index[(i, j)]]
+
+
+# ----------------------------------------------------------------------
+# Tile-padded variants for the device backend
+# ----------------------------------------------------------------------
+# TPU vector registers are (sublane, lane) tiles; for float32 the minimum
+# tile is (8, 128).  The Pallas backend's dominant 2-D arrays put the
+# candidate-processor axis on sublanes and the link axis on lanes (the
+# (P, L) lane buffer and the per-hop one-hot masks), so a Mosaic-compiled
+# kernel wants P padded to a sublane multiple and L to a lane multiple.
+# Padding is arithmetic, not control flow (same contract as the hop/route
+# padding above): padded processor lanes carry +inf computation cost and
+# all-invalid routes, so they never win a selection and never commit;
+# padded links are never masked in, so they are never read or written.
+LANE = 128          # last-dim tile multiple (all dtypes)
+SUBLANE_F32 = 8     # second-to-last-dim tile multiple for float32
+
+
+def pad_dim(x: int, multiple: int) -> int:
+    """``x`` rounded up to a multiple (identity when ``multiple`` is 1)."""
+    return -(-x // multiple) * multiple
+
+
+def padded_src_tensors(inst, src: int, R: int, H: int, Pp: int,
+                       Lp: int) -> Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray]:
+    """Route tensors of ``src`` padded to instance-global device dims.
+
+    Returns ``(masks, valid, nhops)`` as float64 NumPy arrays (the device
+    backend casts to its kernel dtype on upload):
+
+      * ``masks``  — ``(R, H, Pp, Lp)`` one-hot hop masks over the link
+        axis (zero rows for hop/route/lane padding and for the
+        ``dst == src`` fake route, which owns no links),
+      * ``valid``  — ``(R, Pp)`` route validity (0 for route padding and
+        for every tile-padded processor lane),
+      * ``nhops``  — ``(R, Pp)`` per-route hop counts.
+
+    ``R``/``H`` are the instance-global maxima over all sources (so one
+    compiled kernel serves every decision); ``Pp``/``Lp`` are the
+    processor/link counts, tile-padded via :func:`pad_dim` when the
+    backend targets a real Mosaic compile.
+    """
+    lay = src_layout(inst, src)
+    P = lay.P
+    masks = np.zeros((R, H, Pp, Lp))
+    for dst in range(P):
+        for r in range(lay.R):
+            for h in range(int(lay.nhops[dst, r])):
+                masks[r, h, dst, lay.lid[dst, r, h]] = 1.0
+    valid = np.zeros((R, Pp))
+    valid[:lay.R, :P] = (~lay.invalid).T
+    nhops = np.zeros((R, Pp))
+    nhops[:lay.R, :P] = lay.nhops.T
+    return masks, valid, nhops
+
+
+def padded_edge_ct(inst, lay: SrcLayout, i: int, j: int, R: int, H: int,
+                   Pp: int) -> np.ndarray:
+    """CTML tensor of edge ``e_ij`` from ``lay.src`` padded to the
+    instance-global ``(R, H, Pp)`` device shape: hop/route/lane padding
+    reads ``-inf`` (a no-op of the Eq. 13-14 max algebra; padded lanes
+    are additionally masked invalid in :func:`padded_src_tensors`)."""
+    row = edge_ct(inst, lay, i, j)
+    full = np.full((R, H, Pp), _NEG_INF)
+    if lay.R == 1:
+        full[0, :lay.H, :lay.P] = row                    # (H, P) hop-major
+    else:
+        full[:lay.R, :lay.H, :lay.P] = row.transpose(1, 2, 0)  # (P, R, H)
+    return full

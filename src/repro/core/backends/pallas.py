@@ -1,14 +1,22 @@
-"""JAX/Pallas candidate-evaluation backend: one device kernel per decision.
+"""JAX/Pallas candidate-evaluation backend: one device kernel per *batch*.
 
-Evaluates all ``P`` placement candidates of one dequeued task in a
-single :func:`pallas_call`.  The route tensors (hop one-hot masks over
-the link axis, CTML rows, route validity/hop counts — all derived from
-the shared :mod:`.layout` precompute) and the committed link state live
-as device arrays; per decision the kernel
+The engine's decision layer hands this backend whole **waves** of
+independent, same-rank-level tasks (``evaluate_batch``); a single
+:func:`pallas_call` evaluates every decision of the wave over all ``P``
+placement candidates, commits each winner to device-resident link and
+processor state *inside the kernel*, and returns the per-decision
+winner/EFT/coefficient arrays in one host transfer.  Host round-trips
+per schedule therefore drop from O(decisions) (the PR-4 per-decision
+kernel) to O(levels) — the HVLB_CC (B) priority order is approximately
+level-sorted, so the queue decomposes into roughly one wave per rank
+level.
 
-  1. broadcasts the committed ``(L,)`` link state into a ``(P, L)``
-     *lane buffer* (lane ``p`` = candidate processor ``p``'s tentative
-     link state),
+Per batch the kernel unrolls the decisions in queue order; decision
+``b``:
+
+  1. broadcasts the carried ``(L,)`` link state into a ``(P, L)`` *lane
+     buffer* (lane ``p`` = candidate processor ``p``'s tentative link
+     state),
   2. walks the task's predecessors in the scalar reference's
      ``(aft, id)`` order; per predecessor it runs the Eq. 13-14
      recurrences as **masked row ops** — ``avail_h`` is a masked max
@@ -16,45 +24,67 @@ as device arrays; per decision the kernel
      selects the best route per lane by the lexicographic
      ``(LFT, hops, index)`` rule, and commits the winning route's hop
      LFTs back into the lane buffer (masked writes),
-  3. batches Eqs. 10-12 and Defs. 4.1-4.2 over all lanes and picks the
-     strict lexicographic ``(value, EFT, proc)`` argmin winner.
+  3. batches Eqs. 10-12 and Defs. 4.1-4.2 over all lanes, picks the
+     strict lexicographic ``(value, EFT, proc)`` argmin winner, and
+  4. **commits in-kernel**: the winner lane's column of the lane buffer
+     *is* the post-decision link state (masked overwrites reproduce the
+     scalar max-commits exactly), and ``proc_free``/``loads``/
+     ``loads/period``/``BP`` update through a winner one-hot — so
+     decision ``b+1`` evaluates against exactly the state the scalar
+     walk would have left.
 
-The host decision layer receives the winner tuple plus the winner's
-per-hop ``(LST, LFT)`` rows (for ``MessagePlacement``/trace records)
-and the per-candidate linear coefficients ``(A_p, B_p)`` for the alpha
-crossing bound, which is evaluated by the *shared* scalar
-:meth:`~.base.CandidateEvaluator.crossing`.  Committing a decision
-updates the host mirrors through the shared scalar ``apply`` and the
-device link state through an exact scatter-``max`` — so the device copy
-stays bit-equal to the host mirror between decisions and trace replay
-works unchanged (traces remain backend-portable).
+Link/processor state lives on device across the whole schedule: the
+kernel returns the updated state arrays, which stay on device as the
+carry for the next wave (never fetched).  The host keeps float64
+mirrors in sync through the *shared* scalar
+:meth:`~.base.CandidateEvaluator.apply` commits on the returned
+decision floats — that is what keeps decision traces backend-portable
+(pallas <-> scalar resume) — and re-uploads the mirrors wholesale
+(one transfer, ``_state_dirty``) after a trace replay touched them.
 
-Precision: all arrays are ``float64``, enabled *scopedly* via
-``jax.experimental.enable_x64()`` so importing this backend does not
-flip the process-global x64 flag.  On CPU-only hosts (CI) the kernel
-runs in interpreter mode (``pallas_call(..., interpret=True)``, forced
-on/off by ``REPRO_PALLAS_INTERPRET=1/0``); there every operation is the
-same IEEE-754 double arithmetic as the scalar reference — in practice
-bit-identical, asserted decision-identical with float-tolerance
-makespans (``tests/test_backend_equivalence.py``).  A compiled TPU run
-would execute in ``float32`` (TPUs have no f64) with tile-padded
-shapes; that relaxes the contract to decision-identity modulo f32
-rounding and is not exercised by the tier-1 suite.
+Precision has two modes, selected per process:
+
+  * **float64 interpreter** (the default off-TPU, CI): every operation
+    is the same IEEE-754 double arithmetic as the scalar reference — in
+    practice bit-identical, asserted decision-identical
+    (``tests/test_backend_equivalence.py``).
+  * **float32 tiled** (the default on TPU, where f64 does not exist;
+    forced anywhere via ``REPRO_PALLAS_DTYPE=float32`` for testing):
+    shapes are tile-padded (``layout.pad_dim`` — P to a sublane
+    multiple, L to a lane multiple) so the kernel Mosaic-compiles, and
+    the contract relaxes to the documented **near-tie policy**: the
+    schedule is decision-identical to scalar except where two
+    candidates' selection values differ by less than
+    :data:`F32_NEAR_TIE_RTOL` (relative), in which case the winner is
+    the f32-lexicographic ``(value, EFT, proc)`` argmin — pinned
+    deterministic for fixed inputs (first index on exact f32 ties).
+    ``REPRO_PALLAS_TILE=1/0`` forces tile padding independently (the
+    padding is arithmetic-neutral, so it can be exercised under the
+    interpreter).
+
+``REPRO_PALLAS_INTERPRET=1/0`` forces interpreter/compiled dispatch
+(default: compiled only on TPU).  Compiled kernels are cached per
+padded static shape in a bounded LRU (:data:`_RUN_CACHE`, capacity
+:data:`_RUN_CACHE_MAX`); eviction only drops a compiled artifact — a
+rebuilt kernel is deterministic, so results never change.  Batch sizes
+are bucketed to powers of two so a schedule compiles O(log max_batch)
+kernel variants, not one per wave width.
 
 Unlike the NumPy vector backend, masked per-hop reads/writes do not
 require link-disjoint routes: hops are walked sequentially, so a route
 may revisit a link.
 
-Per-decision dispatch cost is high (one kernel launch plus the stacked
-route tensors of the task's predecessors); this backend is the
-correctness-first device groundwork, opt-in via ``backend="pallas"``
-(``"auto"`` never selects it).
+``n_launches`` / ``n_roundtrips`` / ``n_state_uploads`` count kernel
+launches, blocking device->host transfers, and host->device state
+re-uploads; ``benchmarks/exp7`` records launches per schedule and the
+CI gate holds them at O(levels).
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import Dict, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,16 +92,28 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from .base import CandidateEvaluator, Decision
-from .layout import SrcLayout, edge_ct, src_layout
+from .layout import (LANE, SUBLANE_F32, pad_dim, padded_edge_ct,
+                     padded_src_tensors, src_layout)
 
 _INF = float("inf")
 _NEG_INF = float("-inf")
 
+# Documented f32 near-tie tolerance: two candidates whose selection
+# values agree within this *relative* tolerance may resolve differently
+# from the f64 scalar reference on the float32 device path (the winner
+# is then the deterministic f32 argmin).  Chosen ~2 decades above the
+# f32 epsilon (1.19e-7) so accumulated rounding across a schedule's
+# worth of in-kernel commits stays inside it.
+F32_NEAR_TIE_RTOL = 1e-5
 
-# jitted kernel wrappers keyed by the static shape signature: instances
-# with the same padded dims share one trace/compile (a fresh jit wrapper
-# per backend instance would re-trace the kernel for every graph)
-_RUN_CACHE: Dict[Tuple[int, int, int, int, int, bool], object] = {}
+# jitted kernel wrappers keyed by the padded static shape signature
+# (B, K, R, H, P, L, f32?, interpret?): instances with the same padded
+# dims share one trace/compile.  Bounded LRU — each entry pins a traced/
+# compiled XLA executable, and a long-lived process scheduling many
+# distinctly-shaped graphs would otherwise grow it forever.  Eviction is
+# safe: rebuilding a kernel is deterministic, results never change.
+_RUN_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_RUN_CACHE_MAX = 32
 
 
 def _use_interpret() -> bool:
@@ -84,27 +126,94 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _decision_kernel(aft_ref, ct_ref, masks_ref, valid_ref, nhops_ref,
-                     lf_ref, pf_ref, comp_ref, ldet_ref, bp_ref, lop_ref,
-                     win_ref, est_ref, eft_ref, a_ref, b_ref,
-                     lst_ref, lft_ref, bestr_ref,
-                     *, K: int, R: int, H: int, P: int, L: int):
-    """All-candidate evaluation of one decision (see module docstring).
+def _use_f32(interpret: bool) -> bool:
+    """Kernel dtype: float32 on the compiled path (TPUs have no f64),
+    float64 under the interpreter (keeps the scalar-reference arithmetic
+    bit-for-bit).  ``REPRO_PALLAS_DTYPE=float32|float64`` forces — the
+    f32 near-tie policy is tested by forcing f32 under the interpreter."""
+    env = os.environ.get("REPRO_PALLAS_DTYPE")
+    if env is not None:
+        if env in ("float32", "f32"):
+            return True
+        if env in ("float64", "f64"):
+            return False
+        raise ValueError(f"REPRO_PALLAS_DTYPE={env!r}: expected float32 "
+                         "or float64")
+    return not interpret
+
+
+def _use_tile(interpret: bool) -> bool:
+    """Tile padding: on for a real Mosaic compile (P to sublane, L to
+    lane multiples), off under the interpreter where it only costs time.
+    ``REPRO_PALLAS_TILE=1/0`` forces (padding is arithmetic-neutral, so
+    the padded shapes are exercised under the interpreter in CI)."""
+    env = os.environ.get("REPRO_PALLAS_TILE")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return not interpret
+
+
+def _bucket(b: int) -> int:
+    """Smallest power of two >= b (bounds compiled kernel variants)."""
+    n = 1
+    while n < b:
+        n *= 2
+    return n
+
+
+def _batch_kernel(alpha_ref, period_ref, aft_ref, ct_ref, masks_ref,
+                  valid_ref, nhops_ref, comp_ref, ldet_ref, flags_ref,
+                  lf0_ref, pf0_ref, loads0_ref, lop0_ref, bp0_ref,
+                  win_ref, est_ref, eft_ref, a_ref, b_ref,
+                  lst_ref, lft_ref, bestr_ref,
+                  lf_ref, pf_ref, loads_ref, lop_ref, bp_ref,
+                  *, K: int, R: int, H: int, P: int, L: int):
+    """One grid step = one decision of the wave (module docstring).
+
+    The wave is a ``grid=(B,)`` launch: TPU (and interpreter) grids
+    iterate **sequentially**, so the link/processor state committed by
+    grid step ``b`` is exactly what step ``b+1`` reads — the carry lives
+    in the state *output* blocks (``lf_ref`` ... ``bp_ref``), whose
+    constant index map revisits the same VMEM block every step; step 0
+    seeds them from the state inputs.  Per-decision inputs/outputs are
+    blocked on the leading (decision) axis, so the traced body is
+    independent of the wave width B.
 
     Static shapes: K padded predecessors x R padded routes x H padded
-    hops; predecessor/route/hop loops unroll at trace time.  Padding is
-    arithmetic, not control flow: padded hops read ``-inf`` and add
-    ``-inf`` CTML (the running maxima ignore them), padded routes mask
-    to ``+inf`` arrival, padded predecessors carry ``aft = -inf`` and
-    all-zero commit masks, so every padded contribution is a no-op of
-    the exact max algebra.
+    hops over (P, L) tile-padded lanes/links; loops unroll at trace
+    time.  Padding is arithmetic, not control flow: padded hops read
+    ``-inf`` and add ``-inf`` CTML (the running maxima ignore them),
+    padded routes mask to ``+inf`` arrival, padded predecessors carry
+    ``aft = -inf`` and all-zero commit masks, padded processor lanes
+    carry ``+inf`` computation cost (never win), and padded *decisions*
+    (bucket tail) carry ``is_real = 0`` so their commit is a no-op —
+    every padded contribution drops out of the exact max algebra.
+
+    ``flags_ref[0] = (is_exit, is_real)``: exit tasks pass ``ldet = 1``
+    rows and select on bare EFT (``BP`` forced to 1, so ``eft * 1 * 1``
+    collapses exactly to the Def. 4.2 value).
     """
-    neg = jnp.array(_NEG_INF, dtype=lf_ref.dtype)
-    # lane buffer: every candidate lane starts from the committed state
-    lane = jnp.broadcast_to(lf_ref[:], (P, L))
-    arrival = jnp.full((P,), _NEG_INF, dtype=lf_ref.dtype)
+    f = lf0_ref.dtype
+    neg = jnp.array(_NEG_INF, dtype=f)
+    one = jnp.array(1.0, dtype=f)
+    alpha = alpha_ref[0]
+    period = period_ref[0]
+    first = pl.program_id(0) == 0
+    # state carry: seeded from the inputs at step 0, thereafter read
+    # back from the revisited output blocks (select discards whatever
+    # the unselected branch read, so the uninitialized step-0 output
+    # read is harmless)
+    lf = jnp.where(first, lf0_ref[:], lf_ref[:])
+    pf = jnp.where(first, pf0_ref[:], pf_ref[:])
+    loads = jnp.where(first, loads0_ref[:], loads_ref[:])
+    lop = jnp.where(first, lop0_ref[:], lop_ref[:])
+    bp = jnp.where(first, bp0_ref[:], bp_ref[:])
+    idx = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)[:, 0]
+
+    lane = jnp.broadcast_to(lf, (P, L))
+    arrival = jnp.full((P,), _NEG_INF, dtype=f)
     for k in range(K):
-        aft_i = aft_ref[k]
+        aft_i = aft_ref[0, k]
         r_lst = []
         r_lft = []
         r_final = []
@@ -113,26 +222,26 @@ def _decision_kernel(aft_ref, ct_ref, masks_ref, valid_ref, nhops_ref,
             lsts = []
             lfts = []
             for h in range(H):
-                m = masks_ref[k, r, h]                       # (P, L) one-hot
+                m = masks_ref[0, k, r, h]                # (P, L) one-hot
                 avail = jnp.max(jnp.where(m > 0, lane, neg), axis=1)
                 lst = jnp.maximum(avail, aft_i) if h == 0 \
-                    else jnp.maximum(lst, avail)             # Eq. 13
-                x = lst + ct_ref[k, r, h]
+                    else jnp.maximum(lst, avail)         # Eq. 13
+                x = lst + ct_ref[0, k, r, h]
                 lft = x if h == 0 else jnp.maximum(lft, x)   # Eq. 14
                 lsts.append(lst)
                 lfts.append(lft)
             r_lst.append(lsts)
             r_lft.append(lfts)
-            r_final.append(jnp.where(valid_ref[k, r] > 0, lft, _INF))
+            r_final.append(jnp.where(valid_ref[0, k, r] > 0, lft, _INF))
         # lexicographic (LFT, hops, route-index) min per lane
         best_f = r_final[0]
-        best_nh = nhops_ref[k, 0]
+        best_nh = nhops_ref[0, k, 0]
         best_r = jnp.zeros((P,), jnp.int32)
         for r in range(1, R):
-            f = r_final[r]
-            nh = nhops_ref[k, r]
-            better = (f < best_f) | ((f == best_f) & (nh < best_nh))
-            best_f = jnp.where(better, f, best_f)
+            fv = r_final[r]
+            nh = nhops_ref[0, k, r]
+            better = (fv < best_f) | ((fv == best_f) & (nh < best_nh))
+            best_f = jnp.where(better, fv, best_f)
             best_nh = jnp.where(better, nh, best_nh)
             best_r = jnp.where(better, jnp.int32(r), best_r)
         # commit the selected route per lane; LFT_h >= avail_h, so a
@@ -140,96 +249,172 @@ def _decision_kernel(aft_ref, ct_ref, masks_ref, valid_ref, nhops_ref,
         for h in range(H):
             sel_lst = r_lst[0][h]
             sel_lft = r_lft[0][h]
-            sel_m = masks_ref[k, 0, h]
+            sel_m = masks_ref[0, k, 0, h]
             for r in range(1, R):
                 pick = best_r == r
                 sel_lst = jnp.where(pick, r_lst[r][h], sel_lst)
                 sel_lft = jnp.where(pick, r_lft[r][h], sel_lft)
-                sel_m = jnp.where(pick[:, None], masks_ref[k, r, h], sel_m)
+                sel_m = jnp.where(pick[:, None],
+                                  masks_ref[0, k, r, h], sel_m)
             lane = jnp.where(sel_m > 0, sel_lft[:, None], lane)
-            lst_ref[k, h, :] = sel_lst
-            lft_ref[k, h, :] = sel_lft
-        bestr_ref[k, :] = best_r
+            lst_ref[0, k, h, :] = sel_lst
+            lft_ref[0, k, h, :] = sel_lft
+        bestr_ref[0, k, :] = best_r
         arrival = jnp.maximum(arrival, best_f)
 
     # ---- batched Eqs. 10-12 + Defs. 4.1-4.2 over all P lanes ----
-    est = jnp.maximum(arrival, pf_ref[:])                    # Eqs. 10-11
-    eft = est + comp_ref[:]                                  # Eq. 12
-    a = eft * ldet_ref[:]
-    value = a * bp_ref[:]        # Def. 4.1 (exit tasks: ldet = bp = 1)
-    b = a * lop_ref[:]
+    est = jnp.maximum(arrival, pf)                       # Eqs. 10-11
+    eft = est + comp_ref[0]                              # Eq. 12
+    a = eft * ldet_ref[0]
+    is_exit = flags_ref[0, 0] > 0
+    value = a * jnp.where(is_exit, one, bp)  # Def. 4.1 (exit: ldet=bp=1)
     # strict lexicographic (value, eft, proc) argmin, first-index ties
     vmin = jnp.min(value)
     tie = value == vmin
     emin = jnp.min(jnp.where(tie, eft, _INF))
     tie &= eft == emin
-    idx = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)[:, 0]
-    win_ref[0] = jnp.min(jnp.where(tie, idx, jnp.int32(P)))
-    est_ref[:] = est
-    eft_ref[:] = eft
-    a_ref[:] = a
-    b_ref[:] = b
+    w = jnp.min(jnp.where(tie, idx, jnp.int32(P)))
+    win_ref[0] = w
+    est_ref[0, :] = est
+    eft_ref[0, :] = eft
+    a_ref[0, :] = a
+    b_ref[0, :] = a * lop            # pre-commit loads/period, as scalar
+    # ---- in-kernel commit (the next grid step reads this state) ----
+    real = flags_ref[0, 1] > 0
+    onehot = (idx == w) & real
+    # the winner lane's column of the lane buffer IS the committed
+    # link state: masked overwrites only ever raise (LFT >= avail),
+    # so the column equals the scalar path's max-folded commits
+    win_col = jnp.max(jnp.where(onehot[:, None], lane, neg), axis=0)
+    lf_ref[:] = jnp.where(real, win_col, lf)
+    pf_ref[:] = jnp.where(onehot, eft, pf)
+    loads = jnp.where(onehot, loads + comp_ref[0], loads)
+    loads_ref[:] = loads
+    lop = jnp.where(onehot, loads / period, lop)
+    lop_ref[:] = lop
+    bp_ref[:] = jnp.where(onehot, one + lop * alpha, bp)
 
 
-def _compiled_run(K: int, R: int, H: int, P: int, L: int,
-                  interpret: bool):
-    key = (K, R, H, P, L, interpret)
-    run = _RUN_CACHE.get(key)
-    if run is not None:
-        return run
-    kern = functools.partial(_decision_kernel, K=K, R=R, H=H, P=P, L=L)
-    f64, i32 = jnp.float64, jnp.int32
-    out_shape = (
-        jax.ShapeDtypeStruct((1,), i32),         # winner lane
-        jax.ShapeDtypeStruct((P,), f64),         # est
-        jax.ShapeDtypeStruct((P,), f64),         # eft
-        jax.ShapeDtypeStruct((P,), f64),         # cand_A
-        jax.ShapeDtypeStruct((P,), f64),         # cand_B
-        jax.ShapeDtypeStruct((K, H, P), f64),    # selected LST
-        jax.ShapeDtypeStruct((K, H, P), f64),    # selected LFT
-        jax.ShapeDtypeStruct((K, P), i32),       # selected route
-    )
-    call = pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)
+def _compiled_run(B: int, K: int, R: int, H: int, P: int, L: int,
+                  f32: bool, interpret: bool):
+    key = (B, K, R, H, P, L, f32, interpret)
+    run = _RUN_CACHE.pop(key, None)
+    if run is None:
+        kern = functools.partial(_batch_kernel, K=K, R=R, H=H, P=P, L=L)
+        f = jnp.float32 if f32 else jnp.float64
+        i32 = jnp.int32
+        full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))  # noqa: E731
+        dec = lambda *shape: pl.BlockSpec((1,) + shape,  # noqa: E731
+                                          lambda i: (i,) + (0,) * len(shape))
+        in_specs = [
+            full(1), full(1),                        # alpha, period
+            dec(K),                                  # aft
+            dec(K, R, H, P),                         # ct
+            dec(K, R, H, P, L),                      # masks
+            dec(K, R, P), dec(K, R, P),              # valid, nhops
+            dec(P), dec(P),                          # comp, ldet
+            dec(2),                                  # (is_exit, is_real)
+            full(L), full(P), full(P), full(P), full(P),   # state in
+        ]
+        out_specs = (
+            dec(),                                   # winner lane
+            dec(P), dec(P), dec(P), dec(P),          # est, eft, A, B
+            dec(K, H, P), dec(K, H, P),              # selected LST/LFT
+            dec(K, P),                               # selected route
+            full(L), full(P), full(P), full(P), full(P),   # state carry
+        )
+        out_shape = (
+            jax.ShapeDtypeStruct((B,), i32),         # winner lane
+            jax.ShapeDtypeStruct((B, P), f),         # est
+            jax.ShapeDtypeStruct((B, P), f),         # eft
+            jax.ShapeDtypeStruct((B, P), f),         # cand_A
+            jax.ShapeDtypeStruct((B, P), f),         # cand_B
+            jax.ShapeDtypeStruct((B, K, H, P), f),   # selected LST
+            jax.ShapeDtypeStruct((B, K, H, P), f),   # selected LFT
+            jax.ShapeDtypeStruct((B, K, P), i32),    # selected route
+            jax.ShapeDtypeStruct((L,), f),           # link state carry
+            jax.ShapeDtypeStruct((P,), f),           # proc_free carry
+            jax.ShapeDtypeStruct((P,), f),           # loads carry
+            jax.ShapeDtypeStruct((P,), f),           # loads/period carry
+            jax.ShapeDtypeStruct((P,), f),           # BP carry
+        )
+        call = pl.pallas_call(kern, grid=(B,), in_specs=in_specs,
+                              out_specs=out_specs, out_shape=out_shape,
+                              interpret=interpret)
 
-    def run(cts, masks, valids, nhopss, aft, lf, pf, comp, ldet, bp, lop):
-        return call(aft, jnp.stack(cts), jnp.stack(masks),
-                    jnp.stack(valids), jnp.stack(nhopss),
-                    lf, pf, comp, ldet, bp, lop)
+        def run(alpha, period, aft, cts, masks, valids, nhopss,
+                comp, ldet, flags, lf, pf, loads, lop, bp):
+            ct = jnp.stack(cts).reshape(B, K, R, H, P)
+            m = jnp.stack(masks).reshape(B, K, R, H, P, L)
+            v = jnp.stack(valids).reshape(B, K, R, P)
+            nh = jnp.stack(nhopss).reshape(B, K, R, P)
+            return call(alpha, period, aft, ct, m, v, nh,
+                        comp, ldet, flags, lf, pf, loads, lop, bp)
 
-    run = jax.jit(run)
+        run = jax.jit(run)
     _RUN_CACHE[key] = run
+    while len(_RUN_CACHE) > _RUN_CACHE_MAX:
+        _RUN_CACHE.popitem(last=False)
     return run
 
 
 class PallasBackend(CandidateEvaluator):
-    """Device-batched candidate evaluation: one Pallas kernel/decision."""
+    """Device-batched candidate evaluation: one Pallas kernel per wave."""
 
     name = "pallas"
 
     def __init__(self, inst) -> None:
         super().__init__(inst)
         self._interpret = _use_interpret()
+        self._f32 = _use_f32(self._interpret)
+        self._tile = _use_tile(self._interpret)
+        self._np_dtype = np.float32 if self._f32 else np.float64
+        self._dtype = jnp.float32 if self._f32 else jnp.float64
         P = inst.P
         self._L = L = max(1, inst._n_links)
-        # instance-global padded dims so per-pred tensors stack
+        # instance-global padded dims so per-pred tensors stack; tile
+        # padding (sublane P, lane L) only when targeting Mosaic
         lays = [src_layout(inst, s) for s in range(P)]
-        self._R = R = max(l.R for l in lays)
-        self._H = H = max(l.H for l in lays)
-        self._K = K = max([1] + [len(p) for p in inst._preds])
-        self._f64 = jnp.float64
+        self._R = max(l.R for l in lays)
+        self._H = max(l.H for l in lays)
+        self._K = max([1] + [len(p) for p in inst._preds])
+        self._Pp = pad_dim(P, SUBLANE_F32) if self._tile else P
+        self._Lp = pad_dim(L, LANE) if self._tile else L
         self._src_dev: Dict[int, Tuple[jax.Array, jax.Array, jax.Array]] = {}
         self._ct_dev: Dict[Tuple[int, int, int], jax.Array] = {}
+        # padding predecessor: aft = -inf, zero masks, -inf CTML, one
+        # valid zero-hop route -> arrival/commit no-ops
+        R, H, Pp, Lp = self._R, self._H, self._Pp, self._Lp
+        pad_ct = np.full((R, H, Pp), _NEG_INF)
+        pad_valid = np.zeros((R, Pp))
+        pad_valid[0] = 1.0
+        self._pad = (self._to_dev(pad_ct),
+                     self._to_dev(np.zeros((R, H, Pp, Lp))),
+                     self._to_dev(pad_valid),
+                     self._to_dev(np.zeros((R, Pp))))
+        # comp rows padded with +inf lanes (padded lanes never win);
+        # ldet rows: exit tasks and padded lanes read exactly 1.0
+        comp_pad = np.full((inst.n, Pp), _INF)
+        comp_pad[:, :P] = inst.comp
+        ldet_pad = np.ones((inst.n, Pp))
+        ldet_pad[:, :P] = inst.ldet
+        ldet_pad[inst._is_exit, :] = 1.0
+        self._comp_rows = comp_pad.astype(self._np_dtype)
+        self._ldet_rows = ldet_pad.astype(self._np_dtype)
+        # instrumentation (read by benchmarks/exp7 and the tests)
+        self.n_launches = 0
+        self.n_roundtrips = 0
+        self.n_state_uploads = 0
+
+    # ------------------------------------------------------------ device
+    def _to_dev(self, arr: np.ndarray) -> jax.Array:
+        """Upload a float array in the kernel dtype (f64 needs the scoped
+        x64 switch so jnp does not silently truncate)."""
+        arr = np.asarray(arr, dtype=self._np_dtype)
+        if self._f32:
+            return jnp.asarray(arr)
         with jax.experimental.enable_x64():
-            # padding predecessor: aft = -inf, zero masks, -inf CTML, one
-            # valid zero-hop route -> arrival/commit no-ops
-            pad_ct = np.full((R, H, P), _NEG_INF)
-            pad_valid = np.zeros((R, P))
-            pad_valid[0] = 1.0
-            self._pad = (jnp.asarray(pad_ct),
-                         jnp.zeros((R, H, P, L), self._f64),
-                         jnp.asarray(pad_valid),
-                         jnp.zeros((R, P), self._f64))
-            self._run = _compiled_run(K, R, H, P, L, self._interpret)
+            return jnp.asarray(arr)
 
     # ------------------------------------------------------------- state
     def _alloc(self) -> None:
@@ -240,125 +425,191 @@ class PallasBackend(CandidateEvaluator):
         self.loads = np.zeros(P, dtype=np.float64)
         self._lop = np.zeros(P, dtype=np.float64)
         self._bp = np.ones(P, dtype=np.float64)
-        self._ones = np.ones(P, dtype=np.float64)
-        with jax.experimental.enable_x64():
-            self._lf_dev = jnp.zeros(L, dtype=self._f64)
+        # device state carry (link_free, proc_free, loads, loads/period,
+        # BP) — built from the host mirrors on first use and after any
+        # host-side commit (trace replay), then carried launch-to-launch
+        self._state: Optional[tuple] = None
+        self._state_dirty = True
 
-    def apply(self, j: int, p: int, est: float, eft: float,
-              msgs: list) -> None:
-        super().apply(j, p, est, eft, msgs)      # host mirrors (shared code)
+    def _upload_state(self) -> None:
+        """(Re)build the device state carry from the float64 host
+        mirrors — one transfer, paid at run start and after a trace
+        replay committed host-side (on the f64 path mirrors and device
+        state are bit-equal, so the re-upload is value-neutral)."""
+        P, Pp, L, Lp = self.inst.P, self._Pp, self._L, self._Lp
+        lf = np.zeros(Lp)
+        lf[:L] = self.link_free
+        pf = np.zeros(Pp)
+        pf[:P] = self.proc_free
+        loads = np.zeros(Pp)
+        loads[:P] = self.loads
+        lop = np.zeros(Pp)
+        lop[:P] = self._lop
+        bp = np.ones(Pp)
+        bp[:P] = self._bp
+        self._state = tuple(self._to_dev(x)
+                            for x in (lf, pf, loads, lop, bp))
+        self._state_dirty = False
+        self.n_state_uploads += 1
+
+    def _commit_host(self, j: int, p: int, est: float, eft: float,
+                     msgs: list) -> None:
+        """Mirror one in-kernel commit on the host: the shared scalar
+        ``apply`` plus the incremental Def.-4.1 terms — same floats in
+        the same order as any other backend, which is what keeps traces
+        recorded here replayable anywhere."""
+        CandidateEvaluator.apply(self, j, p, est, eft, msgs)
         lop = self.loads[p] / self.period
         self._lop[p] = lop
         self._bp[p] = 1.0 + lop * self.alpha
-        if msgs:
-            # scatter-commit on device: max is exact, duplicates fold in
-            # commit order, so the device copy stays bit-equal to the
-            # host mirror — works for fresh decisions and trace replay
-            lids = [lid for (_i, _r, iv) in msgs for (lid, _s, _f) in iv]
-            lfts = [f for (_i, _r, iv) in msgs for (_l, _s, f) in iv]
-            with jax.experimental.enable_x64():
-                self._lf_dev = self._lf_dev.at[jnp.asarray(lids)].max(
-                    jnp.asarray(lfts, dtype=self._f64))
+
+    def apply(self, j: int, p: int, est: float, eft: float,
+              msgs: list) -> None:
+        """Trace-replay commit: host mirrors only; the device carry is
+        marked stale and re-uploaded wholesale before the next launch
+        (replaying n records costs one transfer, not n scatters)."""
+        self._commit_host(j, p, est, eft, msgs)
+        self._state_dirty = True
 
     # ----------------------------------------------------- device consts
     def _src_tensors(self, src: int):
         """One-hot hop masks + route validity/hop counts of ``src``,
-        padded to the instance-global (R, H) and device-resident."""
+        padded to the instance-global (R, H, Pp, Lp) and device-resident
+        (shaped by the shared ``layout`` precompute, uploaded once)."""
         dev = self._src_dev.get(src)
         if dev is None:
-            lay = src_layout(self.inst, src)
-            P, L, R, H = lay.P, self._L, self._R, self._H
-            masks = np.zeros((R, H, P, L))
-            for dst in range(P):
-                for r in range(lay.R):
-                    for h in range(int(lay.nhops[dst, r])):
-                        masks[r, h, dst, lay.lid[dst, r, h]] = 1.0
-            valid = np.zeros((R, P))
-            valid[:lay.R] = (~lay.invalid).T
-            nhops = np.zeros((R, P))
-            nhops[:lay.R] = lay.nhops.T
-            with jax.experimental.enable_x64():
-                dev = (jnp.asarray(masks), jnp.asarray(valid),
-                       jnp.asarray(nhops))
+            masks, valid, nhops = padded_src_tensors(
+                self.inst, src, self._R, self._H, self._Pp, self._Lp)
+            dev = (self._to_dev(masks), self._to_dev(valid),
+                   self._to_dev(nhops))
             self._src_dev[src] = dev
         return dev
 
-    def _edge_tensor(self, i: int, j: int, src: int, lay: SrcLayout):
-        """Device CTML tensor (R, H, P) of edge ``e_ij`` from ``src``,
-        shaped from the shared layout table and uploaded once."""
+    def _edge_tensor(self, i: int, j: int, src: int) -> jax.Array:
+        """Device CTML tensor (R, H, Pp) of edge ``e_ij`` from ``src``,
+        a padded view of the shared all-edge table, uploaded once."""
         ct = self._ct_dev.get((i, j, src))
         if ct is None:
-            row = edge_ct(self.inst, lay, i, j)
-            full = np.full((self._R, self._H, lay.P), _NEG_INF)
-            if lay.R == 1:
-                full[0, :lay.H] = row                # (H, P) hop-major
-            else:
-                full[:lay.R, :lay.H] = row.transpose(1, 2, 0)  # (P, R, H)
-            with jax.experimental.enable_x64():
-                ct = jnp.asarray(full)
+            ct = self._to_dev(padded_edge_ct(
+                self.inst, self.inst._src_layouts[src], i, j,
+                self._R, self._H, self._Pp))
             self._ct_dev[(i, j, src)] = ct
         return ct
 
     # ---------------------------------------------------------- evaluate
-    def evaluate(self, j: int) -> Decision:
+    def _run_batch(self, js: Sequence[int], commit: bool) -> List[Decision]:
+        """Stage one wave, launch one kernel, decode one transfer."""
         inst = self.inst
         P = inst.P
         aft = self.aft
         proc_of = self.proc_of
         K = self._K
+        if self._state_dirty:
+            self._upload_state()
 
-        preds = inst._preds[j]
-        if len(preds) > 1:
-            preds = sorted(preds, key=lambda i: (aft[i], i))
-        srcs = [proc_of[i] for i in preds]
+        B = len(js)
+        Bp = _bucket(B)
         pad_ct, pad_masks, pad_valid, pad_nhops = self._pad
         cts, masks, valids, nhopss = [], [], [], []
-        aft_row = []
-        for i, src in zip(preds, srcs):
-            m, v, nh = self._src_tensors(src)
-            cts.append(self._edge_tensor(i, j, src,
-                                         inst._src_layouts[src]))
-            masks.append(m)
-            valids.append(v)
-            nhopss.append(nh)
-            aft_row.append(aft[i])
-        for _ in range(K - len(preds)):
-            cts.append(pad_ct)
-            masks.append(pad_masks)
-            valids.append(pad_valid)
-            nhopss.append(pad_nhops)
-            aft_row.append(_NEG_INF)
+        aft_rows = np.full((Bp, K), _NEG_INF)
+        flags = np.zeros((Bp, 2))
+        preds_of: List[list] = []
+        srcs_of: List[list] = []
+        comp_rows = np.empty((Bp, self._Pp), dtype=self._np_dtype)
+        ldet_rows = np.ones((Bp, self._Pp), dtype=self._np_dtype)
+        for b, j in enumerate(js):
+            preds = inst._preds[j]
+            if len(preds) > 1:
+                preds = sorted(preds, key=lambda i: (aft[i], i))
+            srcs = [proc_of[i] for i in preds]
+            preds_of.append(preds)
+            srcs_of.append(srcs)
+            for k, (i, src) in enumerate(zip(preds, srcs)):
+                m, v, nh = self._src_tensors(src)
+                cts.append(self._edge_tensor(i, j, src))
+                masks.append(m)
+                valids.append(v)
+                nhopss.append(nh)
+                aft_rows[b, k] = aft[i]
+            for _ in range(K - len(preds)):
+                cts.append(pad_ct)
+                masks.append(pad_masks)
+                valids.append(pad_valid)
+                nhopss.append(pad_nhops)
+            comp_rows[b] = self._comp_rows[j]
+            ldet_rows[b] = self._ldet_rows[j]
+            flags[b, 0] = 1.0 if inst._is_exit[j] else 0.0
+            flags[b, 1] = 1.0 if commit else 0.0
+        if Bp > B:                       # bucket padding: no-op decisions
+            # finite comp rows keep the padded winner math inf-free; the
+            # is_real = 0 flag (zeros-initialized) voids their commit
+            comp_rows[B:] = self._comp_rows[js[0]]
+            ldet_rows[B:] = 1.0
+            for _ in range((Bp - B) * K):
+                cts.append(pad_ct)
+                masks.append(pad_masks)
+                valids.append(pad_valid)
+                nhopss.append(pad_nhops)
 
-        exit_j = inst._is_exit[j]
-        track = self.want_bound and not exit_j
-        # exit tasks select on bare EFT (Def. 4.2): ldet = bp = 1 makes
-        # the kernel's eft * ldet * bp collapse to eft exactly
-        ldet_j = self._ones if exit_j else inst.ldet[j]
-        bp = self._ones if exit_j else self._bp
-        with jax.experimental.enable_x64():
-            out = self._run(tuple(cts), tuple(masks), tuple(valids),
-                            tuple(nhopss), jnp.asarray(aft_row),
-                            self._lf_dev, jnp.asarray(self.proc_free),
-                            jnp.asarray(inst.comp[j]), jnp.asarray(ldet_j),
-                            jnp.asarray(bp), jnp.asarray(self._lop))
-            win, est, eft, ca, cb, lst, lft, bestr = jax.device_get(out)
-        p = int(win[0])
-
-        msgs = []
-        for k, (i, src) in enumerate(zip(preds, srcs)):
-            if src == p:
-                continue
-            r = int(bestr[k, p])
-            lids, robj = inst._src_layouts[src].route_meta[p][r]
-            msgs.append((i, robj,
-                         [(lids[h], float(lst[k, h, p]),
-                           float(lft[k, h, p]))
-                          for h in range(len(lids))]))
-
-        if track:
-            ca, cb = tuple(ca.tolist()), tuple(cb.tolist())
-            contrib = self.crossing(p, ca, cb, self.alpha)
+        run = _compiled_run(Bp, K, self._R, self._H, self._Pp, self._Lp,
+                            self._f32, self._interpret)
+        dt = self._np_dtype
+        args = (np.asarray([self.alpha], dtype=dt),
+                np.asarray([self.period], dtype=dt),
+                aft_rows.astype(dt), tuple(cts), tuple(masks),
+                tuple(valids), tuple(nhopss), comp_rows, ldet_rows,
+                flags.astype(dt), *self._state)
+        if self._f32:
+            out = run(*args)
         else:
-            ca = cb = None
-            contrib = _INF
-        return (p, float(est[p]), float(eft[p]), msgs, ca, cb, contrib)
+            # scoped x64: without it jit canonicalizes the f64 inputs
+            # (and the kernel trace) down to f32
+            with jax.experimental.enable_x64():
+                out = run(*args)
+        self.n_launches += 1
+        if commit:
+            # the state carry stays on device — never fetched
+            self._state = tuple(out[8:])
+        win, est, eft, ca_all, cb_all, lst, lft, bestr = \
+            jax.device_get(out[:8])
+        self.n_roundtrips += 1
+
+        decisions: List[Decision] = []
+        for b, j in enumerate(js):
+            p = int(win[b])
+            msgs = []
+            for k, (i, src) in enumerate(zip(preds_of[b], srcs_of[b])):
+                if src == p:
+                    continue
+                r = int(bestr[b, k, p])
+                lids, robj = inst._src_layouts[src].route_meta[p][r]
+                msgs.append((i, robj,
+                             [(lids[h], float(lst[b, k, h, p]),
+                               float(lft[b, k, h, p]))
+                              for h in range(len(lids))]))
+            track = self.want_bound and not inst._is_exit[j]
+            if track:
+                ca = tuple(float(x) for x in ca_all[b, :P])
+                cb = tuple(float(x) for x in cb_all[b, :P])
+                contrib = self.crossing(p, ca, cb, self.alpha)
+            else:
+                ca = cb = None
+                contrib = _INF
+            d = (p, float(est[b, p]), float(eft[b, p]), msgs, ca, cb,
+                 contrib)
+            if commit:
+                # keep the f64 host mirrors in lockstep via the shared
+                # scalar commit (bit-equal to the device carry on the
+                # f64 path; the authority for trace replay either way)
+                self._commit_host(j, d[0], d[1], d[2], d[3])
+            decisions.append(d)
+        return decisions
+
+    def evaluate_batch(self, js: Sequence[int]) -> List[Decision]:
+        return self._run_batch(js, commit=True)
+
+    def evaluate(self, j: int) -> Decision:
+        # protocol compatibility: a single non-committing evaluation —
+        # the kernel runs with is_real = 0, so the device carry passes
+        # through unchanged and the caller commits via apply()
+        return self._run_batch([j], commit=False)[0]

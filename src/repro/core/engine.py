@@ -17,9 +17,20 @@ per route probed.  :class:`CompiledInstance` preprocesses an
 evaluation backend** (:mod:`repro.core.backends`).  The engine itself is
 the *decision layer*: queue walk, precedence checks, decision-trace
 recording/replay, and :class:`~.scheduler.Schedule` assembly.  The
-*numeric layer* — per-task evaluation of all P placement candidates,
-including the sequential message-routing walks with commit/rollback link
-state — is a :class:`~repro.core.backends.CandidateEvaluator`:
+queue walk is **level-batched**: a *wave* is a maximal run of
+consecutive queue entries carrying no precedence edge into the wave —
+tasks sharing a rank level (the paper's longest entry->node depth,
+which every edge strictly increases) are the canonical case — and each
+wave is handed to the backend whole via ``evaluate_batch``.  The
+HVLB_CC (B) priority order is approximately level-sorted, so a
+schedule decomposes into O(levels) waves.  Decisions are *batch-invariant* (waves still evaluate
+and commit sequentially inside the backend; batching only moves the
+loop), which is what lets a device backend run a whole wave in a single
+kernel launch with one host round-trip per wave instead of per
+decision.  The *numeric layer* — per-task evaluation of all P placement
+candidates, including the sequential message-routing walks with
+commit/rollback link state — is a
+:class:`~repro.core.backends.CandidateEvaluator`:
 ``"scalar"`` (flat Python lists, the bit-exactness reference),
 ``"vector"`` ((P,)-batch NumPy ops, the P >= 8 fast path), or
 ``"pallas"`` (opt-in JAX/Pallas device kernel, interpret mode on CPU);
@@ -72,13 +83,39 @@ from .topology import Topology
 
 _INF = float("inf")
 
+# Default cap on the level-batch size the decision layer hands to
+# ``CandidateEvaluator.evaluate_batch`` (``batch=None``).  Decisions are
+# batch-invariant — the cap only bounds kernel unroll/staging cost for
+# device backends; ``batch=1`` recovers the strict per-decision walk.
+DEFAULT_BATCH_MAX = 16
 
-# One committed decision: (task, proc, est, eft, msgs, cand_A, cand_B).
+
+def validate_batch(batch) -> Optional[int]:
+    """Validated level-batch cap (``None`` passes through as "default").
+
+    Loud on anything but a genuine int >= 1: a non-integral value must
+    not silently truncate to a cap (and a session plan-cache key) the
+    caller never asked for.  Single source of truth for the engine and
+    the session API.
+    """
+    if batch is None:
+        return None
+    if isinstance(batch, bool) or int(batch) != batch or int(batch) < 1:
+        raise ValueError(f"batch must be an int >= 1, got {batch!r}")
+    return int(batch)
+
+
+# One committed decision:
+# (task, proc, est, eft, msgs, cand_A, cand_B, batch_id).
 # ``msgs`` is the winner's [(pred, route, [(link_id, lst, lft), ...]), ...];
 # cand_A/cand_B are P-tuples of the linear selection coefficients (None for
-# exit tasks or when the run did not track the alpha bound).
+# exit tasks or when the run did not track the alpha bound).  ``batch_id``
+# is the index of the level batch that produced the decision — purely
+# informational (decisions are batch-invariant), but recorded so a resumed
+# run can keep its batch numbering monotone and the equivalence tests can
+# assert identical grouping across backends (pallas <-> scalar resume).
 DecisionRecord = Tuple[int, int, float, float, list, Optional[tuple],
-                       Optional[tuple]]
+                       Optional[tuple], int]
 
 
 @dataclasses.dataclass
@@ -209,21 +246,30 @@ class CompiledInstance:
     # ------------------------------------------------------------------
     def schedule(self, queue: Sequence[int], alpha: float = 0.0,
                  period: Optional[float] = None,
-                 backend: Optional[str] = None) -> Schedule:
-        """Array-core equivalent of :func:`~.scheduler.list_schedule`."""
+                 backend: Optional[str] = None,
+                 batch: Optional[int] = None) -> Schedule:
+        """Array-core equivalent of :func:`~.scheduler.list_schedule`.
+
+        ``batch`` caps the level-batch size handed to the backend's
+        ``evaluate_batch`` (``None`` = :data:`DEFAULT_BATCH_MAX`, ``1`` =
+        strict per-decision walk).  Decisions are batch-invariant; the
+        knob trades kernel-launch amortization against staging size on
+        device backends and is a no-op for scalar/vector.
+        """
         s, _, _ = self._run(queue, alpha, period, want_bound=False,
-                            backend=backend)
+                            backend=backend, batch=batch)
         return s
 
     def schedule_with_bound(self, queue: Sequence[int], alpha: float,
                             period: Optional[float] = None,
-                            backend: Optional[str] = None
+                            backend: Optional[str] = None,
+                            batch: Optional[int] = None
                             ) -> Tuple[Schedule, float]:
         """Schedule at ``alpha`` and return ``(schedule, bound)`` where the
         decision trace — hence the schedule — is provably unchanged for
         every ``alpha' in [alpha, bound)``."""
         s, bound, _ = self._run(queue, alpha, period, want_bound=True,
-                                backend=backend)
+                                backend=backend, batch=batch)
         return s, bound
 
     def schedule_traced(self, queue: Sequence[int], alpha: float = 0.0,
@@ -231,7 +277,8 @@ class CompiledInstance:
                         want_bound: bool = True,
                         resume: Optional[DecisionTrace] = None,
                         resume_pos: int = 0,
-                        backend: Optional[str] = None
+                        backend: Optional[str] = None,
+                        batch: Optional[int] = None
                         ) -> Tuple[Schedule, float, DecisionTrace]:
         """Schedule and memoize the decision trace.
 
@@ -247,7 +294,7 @@ class CompiledInstance:
         """
         return self._run(queue, alpha, period, want_bound=want_bound,
                          record=True, resume=resume, resume_pos=resume_pos,
-                         backend=backend)
+                         backend=backend, batch=batch)
 
     # ------------------------------------------------------------------
     def _run(self, queue: Sequence[int], alpha: float,
@@ -255,13 +302,17 @@ class CompiledInstance:
              record: bool = False,
              resume: Optional[DecisionTrace] = None,
              resume_pos: int = 0,
-             backend: Optional[str] = None
+             backend: Optional[str] = None,
+             batch: Optional[int] = None
              ) -> Tuple[Schedule, float, Optional[DecisionTrace]]:
         g, tg = self.g, self.tg
         preds_of = self._preds
         names = self._link_names
         if period is None:
             period = self.default_period
+        batch_cap = validate_batch(batch)
+        if batch_cap is None:
+            batch_cap = DEFAULT_BATCH_MAX
 
         be = self.backend_instance(backend)
         be.start(alpha, period, want_bound)
@@ -272,6 +323,7 @@ class CompiledInstance:
         records: List[DecisionRecord] = []
 
         start = 0
+        bid = 0                      # next live batch id (monotone in-trace)
         if resume is not None and resume_pos > 0:
             if resume.alpha != alpha or resume.want_bound != want_bound \
                     or resume.period != period:
@@ -283,9 +335,11 @@ class CompiledInstance:
             # Re-commit the memoized prefix: the same floating-point state
             # updates in the same order as the original run — no candidate
             # evaluation, no route walks.  Record commits are shared scalar
-            # code, so the trace may come from any backend.
+            # code, so the trace may come from any backend (and any batch
+            # grouping: decisions are batch-invariant, the recorded batch
+            # id is carried along untouched).
             for rec in resume.records[:resume_pos]:
-                j, p, est, eft, msgs, ca, cb = rec
+                j, p, est, eft, msgs, ca, cb, rec_bid = rec
                 be.apply(j, p, est, eft, msgs)
                 for (i, route, iv) in msgs:
                     messages[(i, j)] = MessagePlacement(
@@ -300,26 +354,57 @@ class CompiledInstance:
                         bound = b
                 if record:
                     records.append(rec)
+                bid = rec_bid + 1    # a resumed suffix may split a batch
             self.n_decisions_replayed += resume_pos
 
+        # Level-batched queue walk: a wave is a maximal run of consecutive
+        # queue entries with no precedence edge *into the wave* — tasks
+        # sharing a rank level (longest entry->node depth, which every
+        # edge strictly increases) are the canonical case, and the direct
+        # predecessor check also absorbs independent tasks of interleaved
+        # levels (transitive dependencies cannot hide inside a wave: the
+        # precedence-safe queue would place the intermediate task inside
+        # it too).  Every wave member's predecessors are therefore
+        # committed before the wave starts, so the whole wave can be
+        # staged at once and handed to the backend's evaluate_batch
+        # (which still evaluates/commits sequentially: decisions inside a
+        # wave interact through link and processor state, and the
+        # contract is batch-invariance).
+        q = list(queue[start:]) if start else list(queue)
+        nq = len(q)
         sim_count = 0
-        for j in queue[start:] if start else queue:
-            sim_count += 1
-            for i in preds_of[j]:
-                if not scheduled[i]:
-                    raise SchedulingFailure(
-                        f"task {j} dequeued before predecessor {i} (Sec. 3.2)")
-            p, est, eft, msgs, ca, cb, contrib = be.evaluate(j)
-            be.apply(j, p, est, eft, msgs)
-            for (i, route, iv) in msgs:
-                messages[(i, j)] = MessagePlacement(
-                    (i, j), proc_of[i], p, route,
-                    [(names[lid], s_, f) for (lid, s_, f) in iv])
-            scheduled[j] = True
-            if contrib < bound:
-                bound = contrib
-            if record:
-                records.append((j, p, est, eft, msgs, ca, cb))
+        qi = 0
+        while qi < nq:
+            wave = set()
+            hi = qi
+            while hi < nq and hi - qi < batch_cap:
+                j = q[hi]
+                if any(i in wave for i in preds_of[j]):
+                    break                # depends on the wave: next one
+                wave.add(j)
+                hi += 1
+            batch_js = q[qi:hi]
+            for j in batch_js:
+                for i in preds_of[j]:
+                    if not scheduled[i]:
+                        raise SchedulingFailure(
+                            f"task {j} dequeued before predecessor {i} "
+                            f"(Sec. 3.2)")
+            decisions = be.evaluate_batch(batch_js)
+            for j, (p, est, eft, msgs, ca, cb, contrib) in zip(batch_js,
+                                                               decisions):
+                for (i, route, iv) in msgs:
+                    messages[(i, j)] = MessagePlacement(
+                        (i, j), proc_of[i], p, route,
+                        [(names[lid], s_, f) for (lid, s_, f) in iv])
+                scheduled[j] = True
+                if contrib < bound:
+                    bound = contrib
+                if record:
+                    records.append((j, p, est, eft, msgs, ca, cb, bid))
+            sim_count += len(batch_js)
+            bid += 1
+            qi = hi
 
         self.n_decisions_simulated += sim_count
         trace = DecisionTrace(tuple(queue), alpha,

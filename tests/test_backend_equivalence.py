@@ -30,6 +30,7 @@ from repro.core import (HSV_CC, HVLB_CC_A, HVLB_CC_B, HVLB_CC_IC,
                         CompiledInstance, Scheduler, paper_spg,
                         paper_topology, random_spg, resolve_backend_name)
 from repro.core.backends import AUTO_VECTOR_MIN_P, BackendCompatError
+from repro.core.engine import DEFAULT_BATCH_MAX
 from repro.core.backends.vector import VectorBackend
 from repro.core.ranks import hprv_b, priority_queue, rank_matrix
 from repro.core.topology import Topology, fully_switched_topology
@@ -278,8 +279,9 @@ def test_incompatible_backend_rejected_before_session_state():
     # caches coherent: the scalar plan is fresh, not a stale leftover
     plan = sched.submit(g, HSV_CC(), backend="scalar")
     sess = sched._sessions[id(g)]
-    assert set(sess.plans) == {(HSV_CC(), "scalar")}
+    assert set(sess.plans) == {(HSV_CC(), "scalar", DEFAULT_BATCH_MAX)}
     assert plan.backend == "scalar"
+    assert plan.batch == DEFAULT_BATCH_MAX
 
 
 # ------------------------------------------------ pallas (three-way)
@@ -433,6 +435,36 @@ def test_pallas_selection_end_to_end(monkeypatch):
     monkeypatch.delenv("REPRO_SCHED_BACKEND")
     g8, tg8 = _wide(AUTO_VECTOR_MIN_P, 5)
     assert Scheduler(tg8).submit(g8, ONE_POINT).backend == "vector"
+
+
+def test_paper_example_batched_waves():
+    """The paper queue decomposes into multi-task level waves: batch
+    grouping (trace batch ids) is identical across backends, at least
+    one wave has size > 1, and the batched pallas path pays exactly one
+    kernel launch and one host round-trip per wave — O(levels), not
+    O(decisions)."""
+    pytest.importorskip("jax")
+    from collections import Counter
+
+    g, tg = paper_spg(), paper_topology()
+    r = rank_matrix(g, tg)
+    q = priority_queue(hprv_b(g, tg, r), r.mean(1))
+    inst = CompiledInstance(g, tg, rank=r)
+    traces = {}
+    for b in ("scalar", "vector", "pallas"):
+        _, _, traces[b] = inst.schedule_traced(q, alpha=1.06, backend=b)
+    bids = [rec[7] for rec in traces["scalar"].records]
+    assert bids == [rec[7] for rec in traces["vector"].records]
+    assert bids == [rec[7] for rec in traces["pallas"].records]
+    counts = Counter(bids)
+    assert max(counts.values()) > 1          # a wave of size > 1 ran
+    n_waves = len(counts)
+    assert n_waves < g.n                     # strictly fewer than decisions
+    be = inst.backend_instance("pallas")
+    l0, r0 = be.n_launches, be.n_roundtrips
+    inst.schedule(q, alpha=1.06, backend="pallas")
+    assert be.n_launches - l0 == n_waves
+    assert be.n_roundtrips - r0 == n_waves
 
 
 def test_pallas_supports_link_reuse_routes():

@@ -1,0 +1,358 @@
+"""Level-batched decision layer + compilable f32 Pallas path.
+
+Four contracts pinned here:
+
+* **Batch invariance** — the engine's level-batch grouping (waves of
+  independent, same-rank-level tasks) never changes a decision: any
+  batch cap produces the identical schedule on every backend, batches
+  never contain a precedence edge, and trace records carry identical
+  batch ids across backends (so pallas <-> scalar resume works even
+  when the resume position splits a wave).
+* **O(levels) host traffic** — the batched pallas backend pays exactly
+  one kernel launch and one blocking device->host transfer per wave,
+  and the HVLB_CC (B) queue decomposes into roughly one wave per rank
+  level.
+* **Mode selection** — ``REPRO_PALLAS_INTERPRET`` / ``REPRO_PALLAS_DTYPE``
+  / ``REPRO_PALLAS_TILE`` force the interpreter/compiled dispatch, the
+  kernel dtype, and tile padding; the compiled defaults are f32 +
+  tile-padded (lane/sublane multiples), the interpreter defaults f64 +
+  unpadded.
+* **f32 near-tie policy** — in float32 the schedule is
+  decision-identical to the f64 scalar reference except where two
+  candidates' selection values differ by less than
+  ``F32_NEAR_TIE_RTOL`` (relative); inside that band the winner is the
+  deterministic f32-lexicographic ``(value, EFT, proc)`` argmin
+  (first index on exact f32 ties) — fuzzed across the boundary below.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (HVLB_CC_B, CompiledInstance, Scheduler, paper_spg,
+                        paper_topology, random_spg)
+from repro.core.engine import DEFAULT_BATCH_MAX
+from repro.core.graph import SPG
+from repro.core.ranks import hprv_b, priority_queue, rank_matrix
+from repro.core.topology import fully_switched_topology
+
+
+def _queue_for(g, tg):
+    r = rank_matrix(g, tg)
+    return r, priority_queue(hprv_b(g, tg, r), r.mean(1))
+
+
+def assert_identical(a, b):
+    assert np.array_equal(a.proc, b.proc)
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.finish, b.finish)
+    assert set(a.messages) == set(b.messages)
+    for e, ma in a.messages.items():
+        mb = b.messages[e]
+        assert ma.route == mb.route
+        assert ma.intervals == mb.intervals
+
+
+# ------------------------------------------------------- batch invariance
+@pytest.mark.parametrize("cap", [1, 2, 5, None])
+def test_batch_cap_invariance(cap):
+    """Any batch cap yields the bit-identical schedule (scalar/vector),
+    and every batch respects the level/independence/cap invariants."""
+    tg = paper_topology()
+    for seed in (0, 7):
+        g = random_spg(30, np.random.default_rng(seed), ccr=1.0, tg=tg,
+                       outdeg_constraint=True)
+        r, q = _queue_for(g, tg)
+        inst = CompiledInstance(g, tg, rank=r)
+        ref = inst.schedule(q, alpha=0.8, backend="scalar", batch=1)
+        for backend in ("scalar", "vector"):
+            s, _, tr = inst.schedule_traced(q, 0.8, backend=backend,
+                                            batch=cap)
+            assert_identical(ref, s)
+            eff_cap = DEFAULT_BATCH_MAX if cap is None else cap
+            batches = {}
+            for rec in tr.records:
+                batches.setdefault(rec[7], []).append(rec[0])
+            for bid, tasks in batches.items():
+                assert len(tasks) <= eff_cap
+                for t in tasks:                 # independence: no pred
+                    assert not set(g.pred[t]) & set(tasks)    # in-wave
+
+
+def test_batch_ids_monotone_and_queue_order():
+    g, tg = paper_spg(), paper_topology()
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    _, _, tr = inst.schedule_traced(q, 1.06, backend="scalar")
+    bids = [rec[7] for rec in tr.records]
+    assert bids == sorted(bids)
+    assert [rec[0] for rec in tr.records] == list(q)
+    assert max(Counter(bids).values()) > 1       # a real wave formed
+
+
+def test_batch_zero_rejected():
+    g, tg = paper_spg(), paper_topology()
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    with pytest.raises(ValueError, match="batch"):
+        inst.schedule(q, backend="scalar", batch=0)
+    with pytest.raises(ValueError, match="batch"):
+        inst.schedule(q, backend="scalar", batch=2.5)
+    with pytest.raises(ValueError, match="batch"):
+        Scheduler(tg, batch=0)
+    with pytest.raises(ValueError, match="batch"):
+        # non-integral caps must not silently truncate to a different
+        # cap (and plan-cache key) than the caller asked for
+        Scheduler(tg).submit(g, batch=2.5)
+    with pytest.raises(ValueError, match="batch"):
+        # validated even under the reference engine: a bad per-call
+        # value fails loudly instead of being silently ignored
+        Scheduler(tg, engine="reference").submit(g, batch=0)
+
+
+def test_batch_knob_threading_and_plan_cache():
+    """Session default, per-call override, plan-cache key, and the
+    reference engine's None; plans agree bit-for-bit across caps."""
+    g, tg = paper_spg(), paper_topology()
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    sched = Scheduler(tg, batch=4)
+    p4 = sched.submit(g, policy)
+    assert p4.batch == 4
+    p1 = sched.submit(g, policy, batch=1)        # per-call override wins
+    assert p1.batch == 1
+    assert p1 is not p4                          # distinct cache entries
+    assert_identical(p1.schedule, p4.schedule)
+    keys = set(sched._sessions[id(g)].plans)
+    assert {(policy, k[1], k[2]) for k in keys} >= {
+        (policy, p4.backend, 4), (policy, p1.backend, 1)}
+    assert sched.submit(g, policy) is p4         # cache hit, default cap
+    pref = Scheduler(tg, engine="reference").submit(g, policy)
+    assert pref.batch is None
+    assert_identical(pref.schedule, p4.schedule)
+
+
+def test_resume_mid_batch_cross_backend():
+    """A resume position that splits a wave replays bit-identically —
+    including across backends and batch caps (records are portable and
+    batch ids only annotate)."""
+    tg = paper_topology()
+    g = random_spg(40, np.random.default_rng(11), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    ref, bref, tr = inst.schedule_traced(q, 0.5, backend="scalar")
+    bids = [rec[7] for rec in tr.records]
+    pos = next(k for k in range(1, len(bids)) if bids[k] == bids[k - 1])
+    for backend, cap in (("scalar", None), ("vector", 1), ("vector", 3)):
+        s, b, tr2 = inst.schedule_traced(q, 0.5, resume=tr, resume_pos=pos,
+                                         backend=backend, batch=cap)
+        assert_identical(ref, s)
+        assert b == bref
+        bids2 = [rec[7] for rec in tr2.records]
+        assert bids2[:pos] == bids[:pos]         # prefix annotation kept
+        assert bids2 == sorted(bids2)            # suffix renumbers monotone
+
+
+# --------------------------------------------------- pallas: mode knobs
+def test_interpret_and_mode_env_overrides(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=0/1 forces dispatch; dtype/tile defaults
+    follow it (compiled -> f32 + tile-padded, interpreter -> f64 raw)
+    and have their own overrides."""
+    jax = pytest.importorskip("jax")
+    from repro.core.backends import pallas as pb
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert pb._use_interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert pb._use_interpret() is False
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    assert pb._use_interpret() == (jax.default_backend() != "tpu")
+
+    assert pb._use_f32(interpret=False) is True
+    assert pb._use_f32(interpret=True) is False
+    assert pb._use_tile(interpret=False) is True
+    assert pb._use_tile(interpret=True) is False
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "float32")
+    assert pb._use_f32(interpret=True) is True
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "float64")
+    assert pb._use_f32(interpret=False) is False
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "bf16")
+    with pytest.raises(ValueError, match="REPRO_PALLAS_DTYPE"):
+        pb._use_f32(interpret=True)
+    monkeypatch.delenv("REPRO_PALLAS_DTYPE")
+    monkeypatch.setenv("REPRO_PALLAS_TILE", "1")
+    assert pb._use_tile(interpret=True) is True
+    monkeypatch.setenv("REPRO_PALLAS_TILE", "0")
+    assert pb._use_tile(interpret=False) is False
+    monkeypatch.delenv("REPRO_PALLAS_TILE")
+
+    # a backend built under forced-compiled mode is f32 with tile-padded
+    # (sublane/lane multiple) dims — construction is lazy, no TPU needed
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    g, tg = paper_spg(), paper_topology()
+    inst = CompiledInstance(g, tg)
+    be = pb.PallasBackend(inst)
+    assert be._interpret is False and be._f32 and be._tile
+    assert be._Pp % pb.SUBLANE_F32 == 0 and be._Pp >= inst.P
+    assert be._Lp % pb.LANE == 0 and be._Lp >= inst._n_links
+
+
+def test_interpret_forced_on_runs_and_matches_scalar(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 runs end-to-end and stays
+    decision-identical (it is the CI dispatch, forced explicitly)."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    g, tg = paper_spg(), paper_topology()
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    s = inst.schedule(q, alpha=1.06, backend="scalar")
+    p = inst.schedule(q, alpha=1.06, backend="pallas")
+    assert np.array_equal(s.proc, p.proc)
+    assert np.array_equal(s.finish, p.finish)
+
+
+def test_tile_padding_under_interpreter(monkeypatch):
+    """Tile padding is arithmetic-neutral: forcing the Mosaic-shaped
+    (sublane x lane padded) tensors under the interpreter changes no
+    decision and no float."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_PALLAS_TILE", "1")
+    from repro.core.backends import pallas as pb
+
+    tg = paper_topology()
+    g = random_spg(24, np.random.default_rng(4), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    be = inst.backend_instance("pallas")
+    assert be._tile and be._Pp % pb.SUBLANE_F32 == 0 \
+        and be._Lp % pb.LANE == 0
+    s = inst.schedule(q, alpha=0.85, backend="scalar")
+    p = inst.schedule(q, alpha=0.85, backend="pallas")
+    assert np.array_equal(s.proc, p.proc)
+    assert np.array_equal(s.finish, p.finish)
+
+
+# ------------------------------------------------ pallas: O(levels) I/O
+def test_roundtrips_scale_with_levels_not_decisions():
+    pytest.importorskip("jax")
+    tg = paper_topology()
+    g = random_spg(40, np.random.default_rng(23), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    # expected waves: maximal independent runs of the queue, cap-split
+    runs = 0
+    qi = 0
+    while qi < len(q):
+        wave = set()
+        while qi < len(q) and len(wave) < DEFAULT_BATCH_MAX \
+                and not (set(g.pred[q[qi]]) & wave):
+            wave.add(q[qi])
+            qi += 1
+        runs += 1
+    be = inst.backend_instance("pallas")
+    l0, r0, u0 = be.n_launches, be.n_roundtrips, be.n_state_uploads
+    p = inst.schedule(q, alpha=0.85, backend="pallas")
+    assert be.n_launches - l0 == runs
+    assert be.n_roundtrips - r0 == runs
+    assert be.n_state_uploads - u0 == 1          # one upload per run start
+    # a wave per rank level (plus cap splits), not per decision
+    n_levels = len(set(g.depth.tolist()))
+    assert runs <= n_levels + 2
+    assert runs < g.n // 2
+    s = inst.schedule(q, alpha=0.85, backend="scalar")
+    assert np.array_equal(s.proc, p.proc)
+    assert np.array_equal(s.finish, p.finish)
+
+
+# ------------------------------------------------ pallas: kernel cache
+def test_kernel_cache_lru_eviction_changes_nothing(monkeypatch):
+    """A capacity-1 kernel cache forces an eviction/rebuild on every
+    shape switch; the rebuilt kernels produce identical schedules and
+    the cache never exceeds its bound."""
+    pytest.importorskip("jax")
+    from repro.core.backends import pallas as pb
+
+    monkeypatch.setattr(pb, "_RUN_CACHE_MAX", 1)
+    pb._RUN_CACHE.clear()
+    tg = paper_topology()
+    cases = []
+    for seed, n in ((1, 12), (2, 18)):
+        g = random_spg(n, np.random.default_rng(seed), ccr=1.0, tg=tg,
+                       outdeg_constraint=True)
+        r, q = _queue_for(g, tg)
+        cases.append((CompiledInstance(g, tg, rank=r), q))
+    for _ in range(2):                           # alternate -> evict
+        for inst, q in cases:
+            s = inst.schedule(q, alpha=0.85, backend="scalar")
+            p = inst.schedule(q, alpha=0.85, backend="pallas")
+            assert np.array_equal(s.proc, p.proc)
+            assert np.array_equal(s.finish, p.finish)
+            assert len(pb._RUN_CACHE) <= 1
+
+
+# ------------------------------------------- pallas: f32 near-tie policy
+def _two_proc_tie_case(d: float):
+    """One exit task whose candidate selection values are exactly
+    ``(1.0, 1.0 + d, 2.0)`` (explicit comp matrix; exit tasks select on
+    bare EFT, and EST = 0 on an empty machine — so the kernel's argmin
+    sees exactly these values)."""
+    tg = fully_switched_topology(3, rates=np.ones(3),
+                                 link_speeds=np.ones(3))
+    g = SPG(n=1, edges=[], weights=np.array([1.0]),
+            comp_matrix=np.array([[1.0, 1.0 + d, 2.0]]))
+    return g, tg
+
+
+@pytest.mark.parametrize("mag", [1e-10, 1e-8, 3e-7, 1e-6, 1e-4, 1e-2])
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+def test_f32_near_tie_fuzz(monkeypatch, mag, sign):
+    """Fuzz candidate values across the f32 near-tie boundary: above
+    ``F32_NEAR_TIE_RTOL`` the f32 winner matches the f64 scalar
+    reference; below it the winner is pinned to the deterministic
+    f32-lexicographic argmin (first index on exact f32 ties)."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "float32")
+    from repro.core.backends.pallas import F32_NEAR_TIE_RTOL
+
+    d = sign * mag
+    g, tg = _two_proc_tie_case(d)
+    inst = CompiledInstance(g, tg)
+    scalar_win = int(inst.schedule([0], backend="scalar").proc[0])
+    assert scalar_win == (1 if d < 0 else 0)     # f64 reference
+    pallas_win = int(inst.schedule([0], backend="pallas").proc[0])
+    # the pinned deterministic policy: f32 argmin, first index on ties
+    v0, v1 = np.float32(1.0), np.float32(1.0 + d)
+    predicted = 1 if v1 < v0 else 0
+    assert pallas_win == predicted
+    if mag >= F32_NEAR_TIE_RTOL:
+        # outside the documented band f32 must agree with the reference
+        assert pallas_win == scalar_win
+    # deterministic: a fresh instance reproduces the winner exactly
+    assert int(CompiledInstance(*_two_proc_tie_case(d)).schedule(
+        [0], backend="pallas").proc[0]) == pallas_win
+
+
+def test_f32_schedule_deterministic_and_close(monkeypatch):
+    """Whole-schedule f32 run: deterministic across fresh instances,
+    decision-identical to scalar on a generic (well-separated) workload,
+    floats within the documented tolerance."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "float32")
+    from repro.core.backends.pallas import F32_NEAR_TIE_RTOL
+
+    g, tg = paper_spg(), paper_topology()
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    be = inst.backend_instance("pallas")
+    assert be._f32
+    s = inst.schedule(q, alpha=1.06, backend="scalar")
+    p = inst.schedule(q, alpha=1.06, backend="pallas")
+    assert np.array_equal(s.proc, p.proc)
+    np.testing.assert_allclose(p.finish, s.finish,
+                               rtol=F32_NEAR_TIE_RTOL)
+    p2 = CompiledInstance(g, tg, rank=r).schedule(q, alpha=1.06,
+                                                  backend="pallas")
+    assert np.array_equal(p.proc, p2.proc)
+    assert np.array_equal(p.finish, p2.finish)
