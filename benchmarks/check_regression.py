@@ -5,10 +5,13 @@
       [--min-derived exp7.P8.n100.ref_schedule_us:2.0 ...] \\
       [--max-derived exp7.P8.n500.cold_submit_us:1.6 ...]
 
-Exits non-zero (for CI) if any watched row's ``us_per_call`` regressed by
-more than ``--max-regress`` (fraction) relative to the baseline.  Rows
-missing from either snapshot fail too — a silently dropped watchdog row
-is itself a regression.
+Exits 1 (for CI) if any watched row's ``us_per_call`` regressed by
+more than ``--max-regress`` (fraction) relative to the baseline.  A
+*broken gate* — a snapshot file that is missing/unreadable, or a gated
+row name absent from a snapshot — exits 2 with a one-line message
+naming exactly what is missing: a silently dropped watchdog row is
+itself a regression, and a misconfigured gate must not read as either
+"pass" or "perf regressed".
 
 ``--row`` compares absolute microseconds across snapshots, which only
 makes sense on comparable hardware; ``--min-derived`` /
@@ -26,11 +29,29 @@ import json
 import sys
 
 
-def load_rows(path: str) -> dict:
-    with open(path) as f:
-        snap = json.load(f)
-    return {r["name"]: (float(r["us_per_call"]), r["derived"])
-            for r in snap["rows"]}
+class GateConfigError(Exception):
+    """The gate itself is broken (missing file/row) — exit 2, not 1."""
+
+
+def load_rows(path: str, which: str) -> dict:
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except FileNotFoundError:
+        raise GateConfigError(
+            f"{which} snapshot {path!r} does not exist — run "
+            f"'python -m benchmarks.run --json {path}' first") from None
+    except json.JSONDecodeError as e:
+        raise GateConfigError(
+            f"{which} snapshot {path!r} is not valid JSON: {e}") from None
+    try:
+        return {r["name"]: (float(r["us_per_call"]), r["derived"])
+                for r in snap["rows"]}
+    except (KeyError, TypeError) as e:
+        raise GateConfigError(
+            f"{which} snapshot {path!r} is malformed "
+            f"(missing {e}): expected {{'rows': [{{'name', "
+            f"'us_per_call', 'derived'}}, ...]}}") from None
 
 
 def main() -> int:
@@ -54,14 +75,19 @@ def main() -> int:
         ap.error("nothing to check: pass --row, --min-derived and/or "
                  "--max-derived")
 
-    base = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
-    failed = False
+    try:
+        base = load_rows(args.baseline, "baseline")
+        fresh = load_rows(args.fresh, "fresh")
+    except GateConfigError as e:
+        print(f"GATE BROKEN: {e}")
+        return 2
+    failed = broken = False
     for name in args.row:
         if name not in base or name not in fresh:
-            missing = "baseline" if name not in base else "fresh"
-            print(f"FAIL {name}: missing from {missing} snapshot")
-            failed = True
+            which = "baseline" if name not in base else "fresh"
+            print(f"GATE BROKEN --row {name}: row missing from the "
+                  f"{which} snapshot")
+            broken = True
             continue
         ratio = fresh[name][0] / base[name][0]
         status = "FAIL" if ratio > 1.0 + args.max_regress else "ok"
@@ -69,19 +95,27 @@ def main() -> int:
               f"{fresh[name][0]:.1f}us "
               f"({ratio:.2f}x, limit {1.0 + args.max_regress:.2f}x)")
         failed |= status == "FAIL"
-    for bound_specs, below, kind in ((args.min_derived, True, "floor"),
-                                     (args.max_derived, False, "ceiling")):
+    for bound_specs, below, kind, flag in (
+            (args.min_derived, True, "floor", "--min-derived"),
+            (args.max_derived, False, "ceiling", "--max-derived")):
         for spec in bound_specs:
             name, _, bound = spec.rpartition(":")
+            if not name or not bound:
+                print(f"GATE BROKEN {flag} {spec!r}: expected NAME:VALUE")
+                broken = True
+                continue
             if name not in fresh:
-                print(f"FAIL {name}: missing from fresh snapshot")
-                failed = True
+                print(f"GATE BROKEN {flag} {name}: row missing from the "
+                      f"fresh snapshot")
+                broken = True
                 continue
             value = float(fresh[name][1])
             bad = value < float(bound) if below else value > float(bound)
             status = "FAIL" if bad else "ok"
             print(f"{status} {name}: derived {value:.2f} ({kind} {bound})")
             failed |= bad
+    if broken:
+        return 2
     return 1 if failed else 0
 
 

@@ -1,0 +1,121 @@
+"""Exp 9 (beyond-paper) — fault-recovery economics (DESIGN.md §6).
+
+For each fault class the session absorbs the fault mid-run via the
+fault-invalidation replay path (``mark_failed``/``degrade``) and the row
+records the *recovery latency* (``us_per_call`` — one replan) with the
+*prefix-survival fraction* as the derived metric: the share of the
+decision trace provably untouched by the failed resource that was
+re-committed instead of re-simulated (``1 - invalidated/n``).
+
+The gated scenario (CI: derived >= 0.5) is a P=8 switched network with
+one cold-standby ECU (rate 0.3 — spare capacity the balancer never
+elects) losing exactly that ECU.  Every alpha trace provably avoids it,
+so *exact* fault invalidation keeps the entire prefix (survival 1.0);
+the gate catches any regression where a fault replan needlessly
+re-simulates decisions the dead resource never touched.  Losing a *hot*
+processor is reported alongside (``proc_down_worst``, ungated): its
+first placement — in the heaviest-balancing alpha trace of the sweep —
+is early, so almost the whole trace legitimately re-simulates.
+Survival is a property of which resource dies, not a constant the
+scheduler could promise.
+
+``link_down`` picks the dead link per graph as the first (sorted) link
+whose loss keeps the committed prefix feasible; partitions of an already
+split prefix raise :class:`InfeasibleScheduleError` by design and are
+skipped here (the chaos harness covers them).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import (HVLB_CC_B, InfeasibleScheduleError, Scheduler,
+                        fully_switched_topology, random_spg)
+
+from .common import row, timed
+
+# one clearly slowest processor (index 7) — the gated fault target
+_RATES = [1.0, 1.2, 0.9, 1.1, 1.3, 0.95, 1.05, 0.3]
+_SPEEDS = [1.0, 2.0, 1.5, 1.0, 3.0, 2.5, 1.0, 2.0]
+
+
+def _survival(plan, n: int) -> float:
+    return 1.0 - plan.replay.invalidated_by_fault / n
+
+
+def run(full: bool = False, engine: str = "compiled",
+        backend: Optional[str] = None) -> List[str]:
+    rows: List[str] = []
+    P, n = 8, (240 if full else 120)
+    reps = 5 if full else 3
+    tg = fully_switched_topology(P, _RATES, _SPEEDS)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+
+    def fresh(k):
+        rng = np.random.default_rng(9000 + k)
+        g = random_spg(n, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+        sched = Scheduler(tg, policy=policy, engine=engine,
+                          backend=backend)
+        return g, sched, sched.submit(g)
+
+    # ---- processor failure: slowest ECU (gated) vs hottest (context) --
+    us_slow = us_hot = float("inf")
+    sv_slow: List[float] = []
+    sv_hot: List[float] = []
+    for k in range(reps):
+        g, sched, p0 = fresh(k)
+        plan, us = timed(sched.mark_failed, proc=7)
+        us_slow = min(us_slow, us)
+        sv_slow.append(_survival(plan, n))
+        g, sched, p0 = fresh(k)
+        hot = int(p0.schedule.proc[np.argmin(p0.schedule.start)])
+        plan, us = timed(sched.mark_failed, proc=hot)
+        us_hot = min(us_hot, us)
+        sv_hot.append(_survival(plan, n))
+    rows.append(row(f"exp9.P{P}.n{n}.proc_down_replan_us", us_slow,
+                    float(np.mean(sv_slow))))
+    rows.append(row(f"exp9.P{P}.n{n}.proc_down_worst_replan_us", us_hot,
+                    float(np.mean(sv_hot))))
+
+    # ---- link degradation / link loss --------------------------------
+    us_deg = us_down = float("inf")
+    sv_deg: List[float] = []
+    sv_down: List[float] = []
+    for k in range(reps):
+        g, sched, p0 = fresh(k)
+        plan, us = timed(sched.degrade, link="l8", factor=2.0)
+        us_deg = min(us_deg, us)
+        sv_deg.append(_survival(plan, n))
+        g, sched, p0 = fresh(k)
+        for link in sorted(tg.all_links()):
+            try:
+                plan, us = timed(sched.mark_failed, link=link)
+            except InfeasibleScheduleError:
+                # partition of the committed prefix — an infeasible
+                # replan drops the session state, so rebuild and try
+                # the next link
+                sched = Scheduler(tg, policy=policy, engine=engine,
+                                  backend=backend)
+                sched.submit(g)
+                continue
+            us_down = min(us_down, us)
+            sv_down.append(_survival(plan, n))
+            break
+    rows.append(row(f"exp9.P{P}.n{n}.link_degraded_replan_us", us_deg,
+                    float(np.mean(sv_deg))))
+    rows.append(row(f"exp9.P{P}.n{n}.link_down_replan_us", us_down,
+                    float(np.mean(sv_down)) if sv_down else 0.0))
+
+    # ---- compute spike (rides the update/task_rates path) -------------
+    us_spk = float("inf")
+    sv_spk: List[float] = []
+    for k in range(reps):
+        g, sched, p0 = fresh(k)
+        sink = [t for t in range(g.n) if not g.succ[t]][-1]
+        plan, us = timed(sched.degrade, task=sink, factor=2.0)
+        us_spk = min(us_spk, us)
+        sv_spk.append(_survival(plan, n))
+    rows.append(row(f"exp9.P{P}.n{n}.compute_spike_replan_us", us_spk,
+                    float(np.mean(sv_spk))))
+    return rows

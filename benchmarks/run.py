@@ -34,6 +34,7 @@ MODULES = [
     "exp6_tpu_placement",
     "exp7_engine_scaling",    # compiled-engine throughput scaling
     "exp8_session_api",       # incremental update + fleet submit_many
+    "exp9_faults",            # fault-recovery latency + prefix survival
     "roofline",               # §Roofline summary rows from the dry-run
 ]
 

@@ -7,6 +7,9 @@ from .backends import (CandidateEvaluator, ScalarBackend, VectorBackend,
                        available_backends, default_backend,
                        resolve_backend_name)
 from .engine import CompiledInstance, DecisionTrace
+from .faults import (ComputeSpike, Fault, FaultSpec, InfeasibleScheduleError,
+                     LinkDegraded, LinkDown, ProcessorDown, WaveTimeoutError,
+                     apply_to_graph, apply_to_topology)
 from .graph import PAPER_COMP, PAPER_COMP_EXP5, PAPER_EDGES, SPG, paper_spg
 from .hsv_cc import schedule_hsv_cc
 from .hvlb_cc import schedule_hvlb_cc, schedule_hvlb_cc_best
@@ -17,6 +20,8 @@ from .scheduler import (MessagePlacement, Schedule, SchedulingFailure,
                         list_schedule)
 from .tgff import random_spg
 from .topology import Topology, fully_switched_topology, paper_topology
+from .validate import (ScheduleValidationError, schedule_violations,
+                       validate_schedule)
 
 __all__ = [
     # session API (the supported public surface)
@@ -26,6 +31,11 @@ __all__ = [
     # candidate-evaluation backends
     "CandidateEvaluator", "ScalarBackend", "VectorBackend",
     "available_backends", "default_backend", "resolve_backend_name",
+    # fault model + independent validation (DESIGN.md §6)
+    "Fault", "FaultSpec", "ProcessorDown", "LinkDegraded", "LinkDown",
+    "ComputeSpike", "InfeasibleScheduleError", "WaveTimeoutError",
+    "apply_to_topology", "apply_to_graph",
+    "schedule_violations", "validate_schedule", "ScheduleValidationError",
     "SPG", "paper_spg", "PAPER_EDGES", "PAPER_COMP", "PAPER_COMP_EXP5",
     "Topology", "paper_topology", "fully_switched_topology",
     "rank_matrix", "hrank", "hprv_a", "hprv_b", "ldet_cc", "priority_queue",

@@ -53,25 +53,53 @@ reference).
 from __future__ import annotations
 
 import dataclasses
+import os
+import warnings
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .backends import resolve_backend_name
+from .backends import (PALLAS, default_backend, resolve_backend_name,
+                       vector_compatible)
 from .deprecation import warn_once
 from .engine import (DEFAULT_BATCH_MAX, CompiledInstance, DecisionTrace,
                      validate_batch)
+from .faults import (ComputeSpike, Fault, FaultSpec, InfeasibleScheduleError,
+                     LinkDegraded, LinkDown, ProcessorDown)
 from .graph import SPG
 from .imprecise import precision as _precision
 from .imprecise import schedule_holes
 from .ranks import hprv_a, hprv_b, ldet_cc, priority_queue, rank_matrix
-from .scheduler import Schedule, list_schedule
+from .scheduler import Schedule, SchedulingFailure, list_schedule
 from .topology import Topology
+from .validate import (check_graph, check_link_speeds, check_task_rates,
+                       check_topology)
 
 # Grid alphas closer than this to a predicted trace-flip point are
 # re-simulated rather than skipped (guards the last-ulp difference between
 # the linear prediction A + B*alpha and the simulated Def. 4.1 value).
 _SKIP_MARGIN = 1e-6
+
+# Backends the session demotes away from when they fail mid-plan (the
+# fallback chain, DESIGN.md §6): only opt-in *device* backends — a NumPy
+# backend error is a real bug and must surface.
+_DEVICE_BACKENDS = (PALLAS,)
+
+# (from, to) pairs already warned about — the fallback chain warns once
+# per process, not once per submit.
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_fallback(src: str, dst: str, err: BaseException) -> None:
+    key = (src, dst)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"scheduler backend {src!r} failed "
+        f"({type(err).__name__}: {err}); demoting to {dst!r} "
+        f"(decisions are backend-identical; further demotions of this "
+        f"kind stay silent)", RuntimeWarning, stacklevel=4)
 
 
 # ----------------------------------------------------------------------
@@ -165,6 +193,10 @@ class ReplayStats:
     decisions_replayed: int      # positions re-committed from the trace
     sims_resumed: int            # alpha points resumed from a trace
     sims_full: int               # alpha points simulated from scratch
+    # queue positions a fault event invalidated (len(queue) - suffix_start
+    # on fault-triggered replans; 0 on submits and benign-drift updates):
+    # the prefix-survival counter asserted by the chaos tests / exp9
+    invalidated_by_fault: int = 0
 
 
 @dataclasses.dataclass
@@ -181,6 +213,12 @@ class Plan:
     backend: Optional[str] = None    # resolved evaluator ("reference": None)
     batch: Optional[int] = None      # resolved level-batch cap (reference:
     #                                  None; decisions are batch-invariant)
+    # backend demotions taken to produce this plan, oldest first:
+    # (from_backend, to_backend, reason) triples — None when the requested
+    # backend ran clean.  ``backend`` above is the evaluator that actually
+    # produced the schedule (decisions are backend-identical, so a demoted
+    # plan's schedule equals the one the requested backend would have made).
+    fallback: Optional[Tuple[Tuple[str, str, str], ...]] = None
 
     @property
     def makespan(self) -> float:
@@ -225,6 +263,7 @@ class FleetPlan:
     sweep: Optional[SweepResult] = None
     backend: Optional[str] = None
     batch: Optional[int] = None
+    fallback: Optional[Tuple[Tuple[str, str, str], ...]] = None
 
     @property
     def makespan(self) -> float:
@@ -262,16 +301,25 @@ class _GraphSession:
     """
 
     __slots__ = ("g", "handles", "rank", "ldet", "queues", "periods",
-                 "traces", "plans", "_tg", "_compiled", "_inst")
+                 "traces", "plans", "_tg", "_compiled", "_inst", "_faults")
 
-    def __init__(self, g: SPG, tg: Topology, compiled: bool) -> None:
+    def __init__(self, g: SPG, tg: Topology, compiled: bool,
+                 faults: Optional[FaultSpec] = None,
+                 rank: Optional[np.ndarray] = None,
+                 ldet: Optional[np.ndarray] = None) -> None:
         self.g = g
         self.handles = [g]      # graph objects that address this session
         self._tg = tg
         self._compiled = compiled
+        # active resource faults at session-build time; the compiled
+        # instance embeds their masking, so the session cache is cleared
+        # whenever the spec changes (Scheduler._fault_event).  Rank/LDET
+        # stay those of the *healthy* system (DESIGN.md §6) and may be
+        # handed over from a superseded session of the same (g, tg).
+        self._faults = None if faults is None or faults.is_empty else faults
         self._inst: Optional[CompiledInstance] = None
-        self.rank = rank_matrix(g, tg)
-        self.ldet = ldet_cc(g, tg, self.rank)
+        self.rank = rank_matrix(g, tg) if rank is None else rank
+        self.ldet = ldet_cc(g, tg, self.rank) if ldet is None else ldet
         self.queues: Dict[tuple, List[int]] = {}
         self.periods: Dict[Policy, float] = {}
         # traces are shared across backends and batch caps (records are
@@ -286,7 +334,8 @@ class _GraphSession:
     def inst(self) -> Optional[CompiledInstance]:
         if self._compiled and self._inst is None:
             self._inst = CompiledInstance(self.g, self._tg, rank=self.rank,
-                                          ldet=self.ldet)
+                                          ldet=self.ldet,
+                                          faults=self._faults)
         return self._inst
 
     def queue_for(self, tg: Topology, policy: Policy) -> List[int]:
@@ -390,14 +439,33 @@ class Scheduler:
     def __init__(self, topology: Topology, policy: Optional[Policy] = None,
                  engine: str = "compiled",
                  backend: Optional[str] = None,
-                 batch: Optional[int] = None) -> None:
+                 batch: Optional[int] = None,
+                 faults: Iterable[Fault] = (),
+                 wave_timeout: Optional[float] = None) -> None:
         if engine not in ("compiled", "reference"):
             raise ValueError(f"unknown engine {engine!r}")
+        check_topology(topology)
         self.topology = topology
         self.policy: Policy = HVLB_CC_B() if policy is None else policy
         self.engine = engine
         self.backend = backend
         self.batch = validate_batch(batch)
+        # active resource faults: start from ``faults`` (so a restarted
+        # service can resume a degraded fleet), grown/shrunk by
+        # mark_failed/degrade/restore.  ComputeSpike is graph drift, not
+        # resource state — FaultSpec.from_faults rejects it here.
+        self._spec = FaultSpec.from_faults(faults, topology)
+        # engine watchdog: per-wave wall-clock budget (seconds) applied to
+        # *device* backends only — a wave overrun raises WaveTimeoutError,
+        # which the fallback chain demotes on.  None (default, or env
+        # REPRO_SCHED_WAVE_TIMEOUT unset/empty) disables the watchdog.
+        if wave_timeout is None:
+            env = os.environ.get("REPRO_SCHED_WAVE_TIMEOUT", "")
+            wave_timeout = float(env) if env else None
+        if wave_timeout is not None and wave_timeout <= 0:
+            raise ValueError(f"wave_timeout must be > 0 seconds, got "
+                             f"{wave_timeout!r}")
+        self.wave_timeout = wave_timeout
         self._sessions: Dict[int, _GraphSession] = {}
         self._last: Optional[_GraphSession] = None
         # probe_update's dry-run state, reused by a matching update()
@@ -429,6 +497,42 @@ class Scheduler:
             self.topology.n_procs, self.topology)
         return name if self.engine == "compiled" else None
 
+    def _resolve_backend_fb(self, backend: Optional[str]
+                            ) -> Tuple[Optional[str],
+                                       Tuple[Tuple[str, str, str], ...]]:
+        """Resolve with the fallback chain's resolve-time demotion.
+
+        A requested *device* backend that cannot even resolve (jax
+        missing / broken install) demotes to the chain's next NumPy
+        backend instead of raising — the session must survive a broken
+        opt-in accelerator — and the pending ``(from, to, reason)``
+        record is attached to the produced plan.  Everything else
+        (unknown names, vector-incompatibility) raises exactly like
+        :meth:`_resolve_backend`.
+        """
+        req = self.backend if backend is None else backend
+        if req is None:
+            req = default_backend()
+        try:
+            return self._resolve_backend(req), ()
+        except Exception as e:
+            if req not in _DEVICE_BACKENDS:
+                raise
+            target = self._fallback_chain(req)[1]
+            _warn_fallback(req, target, e)
+            return (target if self.engine == "compiled" else None,
+                    ((req, target, f"{type(e).__name__}: {e}"),))
+
+    def _fallback_chain(self, name: Optional[str]) -> List[str]:
+        """Demotion order starting at ``name`` (device backends only
+        grow a tail: pallas -> vector (when route-compatible) -> scalar)."""
+        chain = [name]
+        if name in _DEVICE_BACKENDS:
+            if vector_compatible(self.topology):
+                chain.append("vector")
+            chain.append("scalar")
+        return chain
+
     # ------------------------------------------------------------- submit
     def submit(self, g: SPG, policy: Optional[Policy] = None,
                backend: Optional[str] = None,
@@ -440,17 +544,20 @@ class Scheduler:
         — the cached plan.
         """
         policy = self.policy if policy is None else policy
-        bname = self._resolve_backend(backend)
+        bname, pending = self._resolve_backend_fb(backend)
         bcap = self._resolve_batch(batch)
         sess = self._sessions.get(id(g))
         if sess is None or sess.g is not g:
+            check_graph(g)       # actionable errors at the boundary
             sess = _GraphSession(g, self.topology,
-                                 compiled=self.engine == "compiled")
+                                 compiled=self.engine == "compiled",
+                                 faults=self._spec)
             self._sessions[id(g)] = sess
         self._last = sess
         plan = sess.plans.get((policy, bname, bcap))
         if plan is None:
-            plan = self._plan(sess, policy, backend=bname, batch=bcap)
+            plan = self._plan_fb(sess, policy, backend=bname, batch=bcap,
+                                 pending=pending)
             sess.plans[(policy, bname, bcap)] = plan
         return plan
 
@@ -478,7 +585,8 @@ class Scheduler:
         return FleetPlan(schedule=plan.schedule, graphs=graphs,
                          offsets=offsets, policy=policy,
                          period=plan.period, sweep=plan.sweep,
-                         backend=plan.backend, batch=plan.batch)
+                         backend=plan.backend, batch=plan.batch,
+                         fallback=plan.fallback)
 
     # ------------------------------------------------------------- update
     def probe_update(self, *, task_rates: Dict[int, float],
@@ -497,6 +605,7 @@ class Scheduler:
         sess = self._session_of(graph)
         if sess is None:
             raise ValueError("probe_update() before any submit()")
+        check_task_rates(task_rates, sess.g.n)
         changed = {t: f for t, f in task_rates.items() if f != 1.0}
         queue_len = len(sess.queue_for(self.topology, policy))
         if not changed:
@@ -504,7 +613,8 @@ class Scheduler:
         if self.engine != "compiled":
             return 0
         new_sess = _GraphSession(_rescaled_graph(sess.g, changed),
-                                 self.topology, compiled=True)
+                                 self.topology, compiled=True,
+                                 faults=self._spec)
         prefix = self._clean_prefix(sess, new_sess, policy)
         self._probe = (sess, policy, tuple(sorted(changed.items())),
                        new_sess, prefix)
@@ -532,14 +642,15 @@ class Scheduler:
         if sess is None:
             raise ValueError("update() before any submit(): the session "
                              "has no graph to re-plan")
+        if task_rates:
+            check_task_rates(task_rates, sess.g.n)
+        if link_speed:
+            check_link_speeds(link_speed, self.topology)
         changed = {t: f for t, f in (task_rates or {}).items() if f != 1.0}
         link_changed = bool(link_speed)
 
         if link_changed:
             speeds = dict(self.topology.link_speed)
-            unknown = set(link_speed) - set(speeds)
-            if unknown:
-                raise ValueError(f"unknown links {sorted(unknown)}")
             speeds.update(link_speed)
             self.topology = Topology(
                 list(self.topology.proc_names), self.topology.rates.copy(),
@@ -563,7 +674,8 @@ class Scheduler:
         else:
             new_g = _rescaled_graph(sess.g, changed) if changed else sess.g
             new_sess = _GraphSession(new_g, self.topology,
-                                     compiled=self.engine == "compiled")
+                                     compiled=self.engine == "compiled",
+                                     faults=self._spec)
             suffix_start = 0
             if self.engine == "compiled" and not link_changed:
                 suffix_start = self._clean_prefix(sess, new_sess, policy)
@@ -573,11 +685,11 @@ class Scheduler:
         if suffix_start > 0:
             prev_traces = sess.traces.get(policy)
 
-        bname = self._resolve_backend(backend)
+        bname, pending = self._resolve_backend_fb(backend)
         bcap = self._resolve_batch(batch)
-        plan = self._plan(new_sess, policy, prev_traces=prev_traces,
-                          suffix_start=suffix_start, backend=bname,
-                          batch=bcap)
+        plan = self._plan_fb(new_sess, policy, prev_traces=prev_traces,
+                             suffix_start=suffix_start, backend=bname,
+                             batch=bcap, pending=pending)
         new_sess.plans[(policy, bname, bcap)] = plan
         # the originally submitted handle and the new graph both address
         # this session; every map entry still pointing at the superseded
@@ -589,6 +701,171 @@ class Scheduler:
             self._sessions[id(h)] = new_sess
         self._last = new_sess
         return plan
+
+    # ------------------------------------------------------------- faults
+    @property
+    def faults(self) -> FaultSpec:
+        """The active resource-fault spec (empty when healthy)."""
+        return self._spec
+
+    def mark_failed(self, *, proc: Optional[int] = None,
+                    link: Optional[str] = None,
+                    graph: Optional[SPG] = None,
+                    policy: Optional[Policy] = None,
+                    backend: Optional[str] = None,
+                    batch: Optional[int] = None) -> Optional[Plan]:
+        """Record a hard resource failure and replan around it.
+
+        Exactly one of ``proc`` (processor index — :class:`ProcessorDown`)
+        or ``link`` (link name — :class:`LinkDown`) must be given.  The
+        replan invalidates exactly the decision-trace suffix that touches
+        the failed resource: for a processor, positions from its first
+        placement; for a link, positions from the first committed message
+        interval on it (everything earlier is provably unchanged — the
+        priorities stay healthy and a masked resource only worsens losing
+        candidates, see DESIGN.md §6).  ``ReplayStats.invalidated_by_fault``
+        on the returned plan counts the invalidated positions.
+
+        Raises :class:`InfeasibleScheduleError` when some task has no
+        feasible placement left; the fault stays recorded either way.
+        Returns ``None`` when called before any ``submit`` (the fault is
+        recorded and applies to every later submit).
+        """
+        if (proc is None) == (link is None):
+            raise ValueError("mark_failed needs exactly one of "
+                             "proc=<index> or link=<name>")
+        fault: Fault = ProcessorDown(int(proc)) if proc is not None \
+            else LinkDown(link)
+        return self._apply_fault(fault, graph, policy, backend, batch)
+
+    def degrade(self, *, link: Optional[str] = None,
+                task: Optional[int] = None, factor: float,
+                graph: Optional[SPG] = None,
+                policy: Optional[Policy] = None,
+                backend: Optional[str] = None,
+                batch: Optional[int] = None) -> Optional[Plan]:
+        """Record a soft degradation and replan.
+
+        ``link=`` sets the link's slowdown factor (CTML of every message
+        on it scales by ``factor``; ``factor=1`` restores nominal speed).
+        ``task=`` is a :class:`ComputeSpike`: the task's computational
+        volume scales by ``factor`` via the ``update(task_rates=...)``
+        drift machinery (it rescales the *current* graph, so two spikes
+        of 2.0 compose to 4.0).  Suffix invalidation follows the same
+        trace-scan rule as :meth:`mark_failed`; a degradation that makes
+        a link *faster* than before (factor below the previous one)
+        conservatively invalidates the whole trace.
+        """
+        if (link is None) == (task is None):
+            raise ValueError("degrade needs exactly one of link=<name> "
+                             "or task=<index>")
+        if task is not None:
+            plan = self.update(task_rates={int(task): float(factor)},
+                               graph=graph, policy=policy, backend=backend,
+                               batch=batch)
+            plan.replay.invalidated_by_fault = \
+                plan.graph.n - plan.replay.suffix_start
+            return plan
+        return self._apply_fault(LinkDegraded(link, float(factor)),
+                                 graph, policy, backend, batch)
+
+    def restore(self, *, proc: Optional[int] = None,
+                link: Optional[str] = None,
+                graph: Optional[SPG] = None,
+                policy: Optional[Policy] = None,
+                backend: Optional[str] = None,
+                batch: Optional[int] = None) -> Optional[Plan]:
+        """Clear a recorded fault and replan (full re-simulation: a
+        restored resource can improve *any* decision, so no prefix is
+        provably unchanged).  No-op replan if the resource was healthy."""
+        if (proc is None) == (link is None):
+            raise ValueError("restore needs exactly one of proc=<index> "
+                             "or link=<name>")
+        new_spec = self._spec.without(proc=proc, link=link)
+        return self._fault_event(new_spec, None, graph, policy, backend,
+                                 batch)
+
+    def _apply_fault(self, fault: Fault, graph: Optional[SPG],
+                     policy: Optional[Policy], backend: Optional[str],
+                     batch: Optional[int]) -> Optional[Plan]:
+        new_spec = self._spec.with_fault(fault, self.topology)
+        scan: Optional[tuple] = None
+        if isinstance(fault, ProcessorDown):
+            scan = ("proc", fault.proc)
+        else:                    # LinkDown / LinkDegraded
+            old_f = self._spec.link_factor(fault.link)
+            new_f = new_spec.link_factor(fault.link)
+            if new_f >= old_f:
+                # strictly-worse (or unchanged) link: the trace prefix
+                # whose committed messages avoid it is provably unchanged
+                scan = ("link", self.topology.link_index()[fault.link])
+            # a *faster* link can improve any decision: scan stays None
+            # (conservative full invalidation)
+        return self._fault_event(new_spec, scan, graph, policy, backend,
+                                 batch)
+
+    def _fault_event(self, new_spec: FaultSpec, scan: Optional[tuple],
+                     graph: Optional[SPG], policy: Optional[Policy],
+                     backend: Optional[str], batch: Optional[int]
+                     ) -> Optional[Plan]:
+        policy = self.policy if policy is None else policy
+        sess = self._session_of(graph)
+        self._spec = new_spec
+        # every cached session embeds the previous spec's masking
+        self._sessions = {}
+        self._probe = None
+        if sess is None:
+            self._last = None
+            return None          # recorded; applies to every later submit
+        queue = sess.queue_for(self.topology, policy)
+        suffix_start = 0
+        if self.engine == "compiled" and scan is not None:
+            traces = sess.traces.get(policy)
+            if traces:
+                suffix_start = min(
+                    self._fault_prefix(tr, scan) for tr in traces.values())
+        prev_traces = sess.traces.get(policy) if suffix_start > 0 else None
+        new_sess = _GraphSession(sess.g, self.topology,
+                                 compiled=self.engine == "compiled",
+                                 faults=new_spec,
+                                 rank=sess.rank, ldet=sess.ldet)
+        new_sess.queues = dict(sess.queues)      # healthy heuristics
+        new_sess.periods = dict(sess.periods)    # keep the pinned period
+        bname, pending = self._resolve_backend_fb(backend)
+        bcap = self._resolve_batch(batch)
+        try:
+            plan = self._plan_fb(new_sess, policy, prev_traces=prev_traces,
+                                 suffix_start=suffix_start, backend=bname,
+                                 batch=bcap, pending=pending,
+                                 invalidated=len(queue) - suffix_start)
+        except InfeasibleScheduleError:
+            # the fault stays recorded and the stale sessions stay
+            # dropped: later submits keep raising until restore()
+            self._last = None
+            raise
+        new_sess.plans[(policy, bname, bcap)] = plan
+        new_sess.handles = list(sess.handles)
+        for h in new_sess.handles:
+            self._sessions[id(h)] = new_sess
+        self._last = new_sess
+        return plan
+
+    @staticmethod
+    def _fault_prefix(trace: DecisionTrace, scan: tuple) -> int:
+        """First trace position touching the failed resource (trace
+        length when none does — the whole trace survives)."""
+        kind, ident = scan
+        if kind == "proc":
+            for k, rec in enumerate(trace.records):
+                if rec[1] == ident:
+                    return k
+        else:
+            for k, rec in enumerate(trace.records):
+                for (_i, _route, iv) in rec[4]:
+                    for (lid, _s, _f) in iv:
+                        if lid == ident:
+                            return k
+        return len(trace.records)
 
     def _session_of(self, graph: Optional[SPG]) -> Optional[_GraphSession]:
         if graph is None:
@@ -635,11 +912,60 @@ class Scheduler:
         return prefix
 
     # -------------------------------------------------------------- plan
+    def _plan_fb(self, sess: _GraphSession, policy: Policy,
+                 prev_traces: Optional[Dict[float, DecisionTrace]] = None,
+                 suffix_start: int = 0,
+                 backend: Optional[str] = None,
+                 batch: Optional[int] = None,
+                 pending: Tuple[Tuple[str, str, str], ...] = (),
+                 invalidated: int = 0) -> Plan:
+        """Run :meth:`_plan` under the backend fallback chain.
+
+        A *device* backend (pallas) failing with a compile/runtime error
+        or a :class:`~.faults.WaveTimeoutError` demotes to the next
+        backend in :meth:`_fallback_chain` for this plan — decisions are
+        backend-identical, so the demoted plan's schedule is the one the
+        requested backend would have produced.  Semantic scheduler errors
+        (:class:`~.faults.InfeasibleScheduleError`,
+        :class:`~.scheduler.SchedulingFailure`) always propagate: they
+        would reproduce on any backend.  Each demotion is recorded on
+        ``Plan.fallback`` and warned once per process; ``pending``
+        carries demotions already taken at backend-resolve time.
+        """
+        chain = self._fallback_chain(backend)
+        records = list(pending)
+        for k, name in enumerate(chain):
+            inst = sess.inst
+            device = name in _DEVICE_BACKENDS
+            if inst is not None and device:
+                inst.wave_timeout = self.wave_timeout
+            try:
+                plan = self._plan(sess, policy, prev_traces=prev_traces,
+                                  suffix_start=suffix_start, backend=name,
+                                  batch=batch, invalidated=invalidated)
+            except (InfeasibleScheduleError, SchedulingFailure):
+                raise
+            except Exception as e:
+                if not device or k + 1 >= len(chain):
+                    raise
+                records.append((name, chain[k + 1],
+                                f"{type(e).__name__}: {e}"))
+                _warn_fallback(name, chain[k + 1], e)
+                continue
+            finally:
+                if inst is not None:
+                    inst.wave_timeout = None
+            if records:
+                plan.fallback = tuple(records)
+            return plan
+        raise AssertionError("unreachable: fallback chain exhausted")
+
     def _plan(self, sess: _GraphSession, policy: Policy,
               prev_traces: Optional[Dict[float, DecisionTrace]] = None,
               suffix_start: int = 0,
               backend: Optional[str] = None,
-              batch: Optional[int] = None) -> Plan:
+              batch: Optional[int] = None,
+              invalidated: int = 0) -> Plan:
         g = sess.g
         queue = sess.queue_for(self.topology, policy)
         inst = sess.inst
@@ -697,7 +1023,8 @@ class Scheduler:
             if inst is not None else sims_full * g.n,
             decisions_replayed=(inst.n_decisions_replayed - rep0)
             if inst is not None else 0,
-            sims_resumed=sims_resumed, sims_full=sims_full)
+            sims_resumed=sims_resumed, sims_full=sims_full,
+            invalidated_by_fault=invalidated)
         holes = schedule_holes(best, include_unbounded=True) \
             if isinstance(policy, HVLB_CC_IC) else None
         return Plan(schedule=best, policy=policy, graph=g, period=period,

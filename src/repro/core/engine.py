@@ -71,11 +71,14 @@ consistency conditions (same alpha/period/queue prefix).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .backends import CandidateEvaluator, backend_class, resolve_backend_name
+from .faults import (DOWN_COMP, INFEASIBLE_EFT, FaultSpec,
+                     InfeasibleScheduleError, WaveTimeoutError)
 from .graph import SPG
 from .ranks import ldet_cc, rank_matrix
 from .scheduler import MessagePlacement, Schedule, SchedulingFailure
@@ -145,12 +148,27 @@ class CompiledInstance:
 
     def __init__(self, g: SPG, tg: Topology,
                  rank: Optional[np.ndarray] = None,
-                 ldet: Optional[np.ndarray] = None) -> None:
+                 ldet: Optional[np.ndarray] = None,
+                 faults: Optional[FaultSpec] = None) -> None:
         self.g, self.tg = g, tg
         self.P = P = tg.n_procs
         self.n = g.n
+        # Fault masking (DESIGN.md §6): a down processor's comp column and
+        # a faulted link's effective speed are masked with *finite*
+        # sentinels right here, so every backend runs its unmodified
+        # healthy-path arithmetic and a masked candidate simply carries an
+        # EFT beyond the feasibility horizon.  Rank/LDET/queues stay those
+        # of the healthy system (priorities are estimates, and freezing
+        # them is what keeps the fault-untouched trace prefix replayable).
+        if faults is not None and faults.is_empty:
+            faults = None
+        self.faults = faults
+        self.wave_timeout: Optional[float] = None   # engine watchdog (s)
 
         comp = g.comp_matrix_for(tg.rates)
+        if faults is not None and faults.down_procs:
+            comp = comp.copy()          # never poison the graph's cache
+            comp[:, list(faults.down_procs)] = DOWN_COMP
         self.comp = comp
         self._comp = comp.tolist()
         self.rank = rank_matrix(g, tg) if rank is None else rank
@@ -161,14 +179,22 @@ class CompiledInstance:
         self._link_names = tg.all_links()
         self._n_links = len(self._link_names)
         link_id = tg.link_index()
+        if faults is not None and faults.link_factors:
+            def _speed(l: str) -> float:
+                return faults.effective_speed(l, float(tg.link_speed[l]))
+        else:
+            def _speed(l: str) -> float:
+                return float(tg.link_speed[l])
         # (src, dst) -> [(link_ids, link_speeds, route_tuple), ...] in the
         # reference's route order (ties prefer fewer hops then route index).
+        # Speeds are the fault-effective ones; backends/layout.py reads
+        # them from here, so one masking point covers every backend.
         self._routes: Dict[Tuple[int, int], List[
             Tuple[Tuple[int, ...], Tuple[float, ...], Tuple[str, ...]]]] = {}
         for pair, rr in tg.routes.items():
             self._routes[pair] = [
                 (tuple(link_id[l] for l in r),
-                 tuple(float(tg.link_speed[l]) for l in r),
+                 tuple(_speed(l) for l in r),
                  r) for r in rr]
         # tpl(e_ij | p_src) per edge; constant over p unless the graph uses
         # the worked-example CCR-proportional convention.
@@ -374,6 +400,8 @@ class CompiledInstance:
         nq = len(q)
         sim_count = 0
         qi = 0
+        faulted = self.faults is not None
+        timeout = self.wave_timeout
         while qi < nq:
             wave = set()
             hi = qi
@@ -390,9 +418,20 @@ class CompiledInstance:
                         raise SchedulingFailure(
                             f"task {j} dequeued before predecessor {i} "
                             f"(Sec. 3.2)")
-            decisions = be.evaluate_batch(batch_js)
+            if timeout is None:
+                decisions = be.evaluate_batch(batch_js)
+            else:
+                t0 = time.monotonic()
+                decisions = be.evaluate_batch(batch_js)
+                elapsed = time.monotonic() - t0
+                if elapsed > timeout:
+                    raise WaveTimeoutError(bid, elapsed, timeout)
             for j, (p, est, eft, msgs, ca, cb, contrib) in zip(batch_js,
                                                                decisions):
+                if faulted and not eft < INFEASIBLE_EFT:
+                    # the *winner* is only reachable through a masked
+                    # resource: no feasible placement exists for j
+                    raise InfeasibleScheduleError(j, eft, self.faults)
                 for (i, route, iv) in msgs:
                     messages[(i, j)] = MessagePlacement(
                         (i, j), proc_of[i], p, route,

@@ -54,8 +54,16 @@ class Topology:
 
     # ------------------------------------------------------------------
     def ctml(self, tpl: float, link: str) -> float:
-        """Communication time of a message on one link (Eq. 15)."""
-        t = tpl / self.link_speed[link]
+        """Communication time of a message on one link (Eq. 15).
+
+        A non-positive speed (a down link in a fault-masked view, see
+        :func:`~.faults.apply_to_topology`) yields ``inf`` rather than a
+        ZeroDivisionError — the link is simply unusable.
+        """
+        sp = self.link_speed[link]
+        if sp <= 0.0:
+            return float("inf")
+        t = tpl / sp
         if self.ctml_mode == "round":
             return float(round(t))
         if self.ctml_mode == "ceil":

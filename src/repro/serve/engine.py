@@ -54,6 +54,11 @@ class StepResult:
     tokens: np.ndarray
     query_outputs: Dict[str, Any]
     precise: Dict[str, bool]
+    # Per-query precision loss report (Eq. 22 shape): 1.0 when the optional
+    # refinement ran (or the query has none), else the mandatory-only
+    # fraction mand/(mand + opt).  Appended with a default so positional
+    # construction by older callers keeps working.
+    precision: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class DSMSEngine:
@@ -118,6 +123,39 @@ class DSMSEngine:
         self.ensure_plan()
         plan = self.scheduler.update(task_rates=task_rates,
                                      graph=self._graph)
+        self._adopt(plan)
+
+    def mark_failed(self, *, proc: Optional[int] = None,
+                    link: Optional[str] = None) -> None:
+        """Report a failed processor or link; replans the serving graph.
+
+        Graceful IC degradation: the replan typically leaves fewer/smaller
+        schedule holes, so optional query refinements stop running and the
+        per-query ``StepResult.precision`` drops below 1.0 — the engine
+        keeps serving rather than failing
+        (:class:`repro.core.InfeasibleScheduleError` still propagates when
+        no feasible placement remains at all).
+        """
+        self.ensure_plan()
+        self._adopt(self.scheduler.mark_failed(proc=proc, link=link,
+                                               graph=self._graph))
+
+    def degrade(self, *, link: Optional[str] = None,
+                task: Optional[int] = None, factor: float) -> None:
+        """Report a degraded link (or a task compute spike); replans."""
+        self.ensure_plan()
+        self._adopt(self.scheduler.degrade(link=link, task=task,
+                                           factor=factor,
+                                           graph=self._graph))
+
+    def restore(self, *, proc: Optional[int] = None,
+                link: Optional[str] = None) -> None:
+        """Clear a previously reported fault; replans from scratch."""
+        self.ensure_plan()
+        self._adopt(self.scheduler.restore(proc=proc, link=link,
+                                           graph=self._graph))
+
+    def _adopt(self, plan) -> None:
         self.replans += 1
         self._graph = plan.graph
         self.plan = plan.schedule
@@ -142,6 +180,7 @@ class DSMSEngine:
         out_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         outputs: Dict[str, Any] = {}
         precise: Dict[str, bool] = {}
+        precision: Dict[str, float] = {}
         for qi, q in enumerate(self.queries):
             res = q.mandatory(logits)
             ok = False
@@ -150,4 +189,6 @@ class DSMSEngine:
                 ok = True
             outputs[q.name] = res
             precise[q.name] = ok or q.optional is None
-        return StepResult(out_tok, outputs, precise)
+            precision[q.name] = 1.0 if precise[q.name] \
+                else 1.0 / (1.0 + q.optional_ratio)
+        return StepResult(out_tok, outputs, precise, precision)

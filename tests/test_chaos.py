@@ -1,0 +1,297 @@
+"""Chaos harness: seeded random fault scripts judged by the independent
+validator (DESIGN.md §6).
+
+Each script drives one long-lived :class:`Scheduler` session through a
+random sequence of fault events — processor/link failures, link/compute
+degradation, rate drift, restores — and after every replan asserts:
+
+  * the schedule is clean under :func:`schedule_violations` (the oracle
+    re-derives precedence, processor/link exclusivity, route feasibility
+    and fault avoidance from the placements alone);
+  * the fault-invalidation counters are consistent
+    (``invalidated_by_fault == n - suffix_start``);
+  * the only exceptions that ever escape are the *typed* ones —
+    :class:`InfeasibleScheduleError` when no feasible placement remains,
+    and the spec-level ``ValueError`` for killing the last processor.
+
+A subset of scripts additionally checks the replanned schedule
+bit-exactly against a fresh scheduler started with the final fault set
+(the suffix-replay soundness oracle).
+
+Seeds come from ``REPRO_CHAOS_SEEDS`` (either ``"a:b"`` for a range or a
+comma list) so CI can matrix a fixed set per backend; the default is 104
+scripts, trimmed when the resolved backend is pallas (interpreted mode).
+"""
+import dataclasses
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (HSV_CC, HVLB_CC_B, HVLB_CC_IC,
+                        InfeasibleScheduleError, LinkDegraded, LinkDown,
+                        ProcessorDown, Scheduler, fully_switched_topology,
+                        paper_topology, random_spg, resolve_backend_name,
+                        schedule_violations)
+
+
+def _seed_list():
+    env = os.environ.get("REPRO_CHAOS_SEEDS")
+    if env:
+        if ":" in env:
+            a, b = env.split(":")
+            return list(range(int(a), int(b)))
+        return [int(s) for s in env.split(",") if s.strip()]
+    try:
+        tg = paper_topology()
+        backend = resolve_backend_name(None, tg.n_procs, tg)
+    except Exception:
+        backend = "scalar"
+    return list(range(24)) if backend == "pallas" else list(range(104))
+
+
+SEEDS = _seed_list()
+
+_POLICIES = (
+    lambda: HVLB_CC_B(alpha_max=1.0, alpha_step=0.5),
+    lambda: HVLB_CC_IC(alpha_max=1.0, alpha_step=0.5),
+    lambda: HSV_CC(),
+)
+
+
+def _random_case(rng):
+    if rng.random() < 0.5:
+        tg = paper_topology()
+    else:
+        P = int(rng.integers(3, 6))
+        tg = fully_switched_topology(
+            P, rates=(0.6 + rng.random(P)).tolist(),
+            link_speeds=(0.8 + 2.0 * rng.random(P)).tolist())
+    n = int(rng.integers(10, 18))
+    g = random_spg(n, rng, ccr=float(rng.choice([0.5, 1.0, 2.0])),
+                   tg=tg, outdeg_constraint=True)
+    pol = _POLICIES[int(rng.integers(len(_POLICIES)))]()
+    return tg, g, pol
+
+
+def _spec_as_faults(spec):
+    faults = [ProcessorDown(p) for p in spec.down_procs]
+    for l, f in spec.link_factors:
+        faults.append(LinkDown(l) if math.isinf(f) else LinkDegraded(l, f))
+    return tuple(faults)
+
+
+def _assert_plan_ok(plan, sched, g):
+    assert plan is not None
+    v = schedule_violations(plan.schedule, sched.faults)
+    assert v == [], v
+    r = plan.replay
+    assert 0 <= r.suffix_start <= g.n
+    assert r.invalidated_by_fault == g.n - r.suffix_start \
+        or r.invalidated_by_fault == 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_script(seed):
+    rng = np.random.default_rng(100_000 + seed)
+    tg, g, pol = _random_case(rng)
+    links = tg.all_links()
+    sched = Scheduler(tg, policy=pol)
+    plan = sched.submit(g)
+    assert schedule_violations(plan.schedule, sched.faults) == []
+
+    drifted = False            # task-rate drift breaks the fresh oracle
+    for _ in range(int(rng.integers(3, 7))):
+        op = rng.choice(["proc_down", "link_down", "link_degrade",
+                         "task_spike", "drift", "restore"])
+        try:
+            if op == "proc_down":
+                up = [p for p in range(tg.n_procs)
+                      if p not in sched.faults.down_procs]
+                plan = sched.mark_failed(proc=int(rng.choice(up)))
+            elif op == "link_down":
+                plan = sched.mark_failed(link=str(rng.choice(links)))
+            elif op == "link_degrade":
+                plan = sched.degrade(link=str(rng.choice(links)),
+                                     factor=float(rng.choice([1.5, 2., 4.])))
+            elif op == "task_spike":
+                plan = sched.degrade(task=int(rng.integers(g.n)),
+                                     factor=float(rng.choice([1.5, 3.0])))
+                drifted = True
+            elif op == "drift":
+                tr = {int(t): float(0.5 + rng.random())
+                      for t in rng.choice(g.n, size=3, replace=False)}
+                plan = sched.update(task_rates=tr)
+                drifted = True
+            else:                                   # restore
+                spec = sched.faults
+                if spec.down_procs and (rng.random() < 0.5
+                                        or not spec.link_factors):
+                    plan = sched.restore(
+                        proc=int(rng.choice(spec.down_procs)))
+                elif spec.link_factors:
+                    plan = sched.restore(
+                        link=str(rng.choice([l for l, _ in
+                                             spec.link_factors])))
+                else:
+                    continue                        # nothing to restore
+        except InfeasibleScheduleError:
+            return                                  # typed, expected
+        except ValueError as e:
+            # killing the last processor is rejected at the spec level
+            assert "every processor marked down" in str(e)
+            return
+        _assert_plan_ok(plan, sched, g)
+
+    # ---- fresh-scheduler oracle: the incrementally replanned schedule
+    # must be bit-identical to planning from scratch under the same
+    # faults (rate drift changes the graph, so skip those scripts).
+    if drifted or sched.faults.is_empty:
+        return
+    fresh_pol = plan.policy
+    if any(f.name == "period" for f in dataclasses.fields(fresh_pol)):
+        fresh_pol = dataclasses.replace(fresh_pol, period=plan.period)
+    fresh = Scheduler(tg, policy=fresh_pol,
+                      faults=_spec_as_faults(sched.faults))
+    try:
+        ref = fresh.submit(g)
+    except InfeasibleScheduleError:
+        pytest.fail("incremental replan succeeded where a fresh plan "
+                    "is infeasible")
+    assert np.array_equal(plan.schedule.proc, ref.schedule.proc)
+    assert np.array_equal(plan.schedule.start, ref.schedule.start)
+    assert np.array_equal(plan.schedule.finish, ref.schedule.finish)
+
+
+# ---------------------------------------------------------------------
+# Targeted fault-replay semantics (deterministic)
+# ---------------------------------------------------------------------
+def _case(seed=0, n=20):
+    rng = np.random.default_rng(seed)
+    tg = paper_topology()
+    g = random_spg(n, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    return tg, g
+
+
+def test_unused_proc_fault_keeps_whole_trace():
+    """Failing a processor the plan never used invalidates nothing and
+    leaves the schedule bit-identical."""
+    rng = np.random.default_rng(3)
+    # one crippled processor (tiny rate => huge comp) the plan avoids
+    tg = fully_switched_topology(4, rates=[1.0, 1.1, 0.9, 1e-6],
+                                 link_speeds=[1.0, 2.0, 1.5, 1.0])
+    g = random_spg(16, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    p0 = sched.submit(g)
+    assert 3 not in set(p0.schedule.proc.tolist())
+    p1 = sched.mark_failed(proc=3)
+    assert p1.replay.invalidated_by_fault == 0
+    assert p1.replay.suffix_start == g.n
+    assert np.array_equal(p0.schedule.proc, p1.schedule.proc)
+    assert np.array_equal(p0.schedule.start, p1.schedule.start)
+    assert np.array_equal(p0.schedule.finish, p1.schedule.finish)
+
+
+def test_used_proc_fault_invalidates_suffix_only():
+    tg, g = _case(0)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    p0 = sched.submit(g)
+    victim = int(p0.schedule.proc[np.argmin(p0.schedule.start)])
+    p1 = sched.mark_failed(proc=victim)
+    assert victim not in set(p1.schedule.proc.tolist())
+    assert p1.replay.invalidated_by_fault == g.n - p1.replay.suffix_start
+    assert p1.replay.invalidated_by_fault > 0
+    assert schedule_violations(p1.schedule, sched.faults) == []
+
+
+def test_unused_link_degrade_keeps_whole_trace():
+    rng = np.random.default_rng(3)
+    # proc 4 is crippled => its star link l4 never carries a message
+    tg = fully_switched_topology(4, rates=[1.0, 1.1, 0.9, 1e-6],
+                                 link_speeds=[1.0, 2.0, 1.5, 1.0])
+    g = random_spg(16, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    p0 = sched.submit(g)
+    used = {l for m in p0.schedule.messages.values()
+            for (l, _s, _f) in m.intervals}
+    assert "l4" not in used
+    p1 = sched.degrade(link="l4", factor=4.0)
+    assert p1.replay.invalidated_by_fault == 0
+    assert np.array_equal(p0.schedule.proc, p1.schedule.proc)
+    assert np.array_equal(p0.schedule.start, p1.schedule.start)
+
+
+def test_restore_returns_to_healthy_plan():
+    tg, g = _case(1)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    p0 = sched.submit(g)
+    sched.mark_failed(proc=1)
+    p2 = sched.restore(proc=1)
+    assert sched.faults.is_empty
+    assert np.array_equal(p0.schedule.proc, p2.schedule.proc)
+    assert np.array_equal(p0.schedule.start, p2.schedule.start)
+    assert np.array_equal(p0.schedule.finish, p2.schedule.finish)
+
+
+def test_kill_last_processor_rejected():
+    tg, g = _case(2)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    sched.submit(g)
+    sched.mark_failed(proc=0)
+    sched.mark_failed(proc=1)
+    with pytest.raises(ValueError, match="every processor marked down"):
+        sched.mark_failed(proc=2)
+
+
+def test_fault_before_submit_is_recorded():
+    tg, g = _case(4)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    assert sched.mark_failed(proc=2) is None     # nothing to replan yet
+    plan = sched.submit(g)
+    assert 2 not in set(plan.schedule.proc.tolist())
+    assert schedule_violations(plan.schedule, sched.faults) == []
+
+
+def test_scheduler_faults_argument():
+    tg, g = _case(5)
+    a = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5),
+                  faults=(ProcessorDown(0),))
+    pa = a.submit(g)
+    b = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    b.submit(g)
+    pb = b.mark_failed(proc=0)
+    assert np.array_equal(pa.schedule.proc, pb.schedule.proc)
+    assert np.array_equal(pa.schedule.start, pb.schedule.start)
+
+
+def test_partition_raises_infeasible():
+    """Committed prefix on both sides of a link partition => the join
+    task has no feasible candidate and the engine raises the typed
+    error instead of scheduling through a dead link."""
+    tg = fully_switched_topology(2, rates=[1.0, 1.0],
+                                 link_speeds=[1.0, 1.0])
+    from repro.core.graph import SPG
+    # two entries (balance splits them across the processors), one join
+    g = SPG(n=3, edges=[(0, 2), (1, 2)], weights=[4.0, 4.0, 2.0],
+            tpl={(0, 2): 2.0, (1, 2): 2.0})
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=1.0))
+    p0 = sched.submit(g)
+    if len(set(p0.schedule.proc[:2].tolist())) < 2:
+        pytest.skip("entries co-located; no partition to exercise")
+    with pytest.raises(InfeasibleScheduleError) as ei:
+        sched.mark_failed(link="l1")
+    assert ei.value.task == 2
+    # the infeasible fault stays recorded; a fresh submit re-raises
+    with pytest.raises(InfeasibleScheduleError):
+        sched.submit(g)
+
+
+def test_compute_spike_rides_update_path():
+    tg, g = _case(6)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    sched.submit(g)
+    plan = sched.degrade(task=int(g.topo_order[-1]), factor=2.0)
+    assert plan.replay.invalidated_by_fault == \
+        g.n - plan.replay.suffix_start
+    assert schedule_violations(plan.schedule, sched.faults) == []

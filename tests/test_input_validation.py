@@ -1,0 +1,148 @@
+"""Session-boundary input validation: bad input fails with an actionable
+one-line ``ValueError`` at ``submit``/``update``/``submit_many``/
+``Scheduler()`` time instead of a deep engine or NumPy stack trace."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (HVLB_CC_B, Scheduler, fully_switched_topology,
+                        paper_topology, random_spg)
+from repro.core.graph import SPG
+
+
+def _sched():
+    tg = paper_topology()
+    rng = np.random.default_rng(0)
+    g = random_spg(12, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+    s = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    return s, g
+
+
+# ---------------------------------------------------------------- rates
+@pytest.mark.parametrize("bad", [float("nan"), 0.0, -1.0, float("inf"),
+                                 "fast", None])
+def test_update_rejects_bad_rate_factor(bad):
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="task_rates"):
+        s.update(task_rates={0: bad})
+
+
+@pytest.mark.parametrize("tid", [-1, 99, 3.5, "t3", None, True])
+def test_update_rejects_unknown_task_id(tid):
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="unknown task id"):
+        s.update(task_rates={tid: 1.5})
+
+
+def test_probe_update_validates_too():
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="unknown task id"):
+        s.probe_update(task_rates={g.n: 1.5})
+
+
+def test_degrade_task_rejects_bad_factor():
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="task_rates"):
+        s.degrade(task=0, factor=float("nan"))
+
+
+# ---------------------------------------------------------------- links
+@pytest.mark.parametrize("bad", [float("nan"), 0.0, -2.0])
+def test_update_rejects_bad_link_speed(bad):
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="link_speed"):
+        s.update(link_speed={"l1": bad})
+
+
+def test_update_rejects_unknown_link():
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="unknown links"):
+        s.update(link_speed={"l99": 1.0})
+
+
+def test_fault_api_rejects_unknown_resources():
+    s, g = _sched()
+    s.submit(g)
+    with pytest.raises(ValueError, match="unknown link"):
+        s.mark_failed(link="l99")
+    with pytest.raises(ValueError, match="out of range"):
+        s.mark_failed(proc=7)
+    with pytest.raises(ValueError, match="finite positive"):
+        s.degrade(link="l1", factor=-2.0)
+    with pytest.raises(ValueError):
+        s.mark_failed()                  # exactly one resource required
+    with pytest.raises(ValueError):
+        s.mark_failed(proc=0, link="l1")
+
+
+# ---------------------------------------------------------------- graphs
+def test_submit_rejects_non_graph():
+    s, _ = _sched()
+    with pytest.raises(ValueError, match="expects an SPG"):
+        s.submit("not a graph")
+
+
+def test_submit_rejects_nan_weights():
+    s, _ = _sched()
+    g = SPG(n=3, edges=[(0, 1), (1, 2)], weights=[1.0, float("nan"), 2.0],
+            tpl={(0, 1): 1.0, (1, 2): 1.0})
+    with pytest.raises(ValueError, match="NaN"):
+        s.submit(g)
+
+
+def test_submit_rejects_negative_weights():
+    s, _ = _sched()
+    g = SPG(n=2, edges=[(0, 1)], weights=[1.0, -3.0], tpl={(0, 1): 1.0})
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        s.submit(g)
+
+
+def test_submit_rejects_cyclic_graph():
+    s, _ = _sched()
+    g = SPG(n=2, edges=[(0, 1)], weights=[1.0, 1.0], tpl={(0, 1): 1.0})
+    g.edges.append((1, 0))               # mutate behind __post_init__
+    g.succ[1] = [0]
+    g.pred[0] = [1]
+    g._topo = []                         # what a re-toposort would find
+    with pytest.raises(ValueError, match="cyclic"):
+        s.submit(g)
+
+
+# ------------------------------------------------------------- topology
+def test_scheduler_rejects_bad_topology_rates():
+    tg = fully_switched_topology(3, rates=[1.0, 0.0, 1.0],
+                                 link_speeds=[1.0, 1.0, 1.0])
+    with pytest.raises(ValueError, match="processor rates"):
+        Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+
+
+def test_scheduler_rejects_bad_topology_link_speed():
+    tg = fully_switched_topology(3, rates=[1.0, 1.0, 1.0],
+                                 link_speeds=[1.0, math.nan, 1.0])
+    with pytest.raises(ValueError, match="link speed"):
+        Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+
+
+def test_scheduler_rejects_route_with_unknown_link():
+    # Topology.__post_init__ itself chokes on a route naming an unknown
+    # link, so build a consistent one and lose the link afterwards (a
+    # hand-mutated table) — check_topology still gives the one-liner.
+    tg = fully_switched_topology(2, rates=[1.0, 1.0],
+                                 link_speeds=[1.0, 1.0])
+    del tg.link_speed["l2"]
+    with pytest.raises(ValueError, match="unknown links"):
+        Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+
+
+def test_wave_timeout_must_be_positive():
+    tg = paper_topology()
+    with pytest.raises(ValueError, match="wave_timeout"):
+        Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5),
+                  wave_timeout=0.0)

@@ -294,3 +294,45 @@ def test_dsms_engine_lazy_replan_counts():
     res = eng.step(np.zeros(2, np.int64))   # first step triggers replan
     assert eng.replans == 2
     assert set(res.query_outputs) == {"q0", "q1", "q2", "late"}
+
+
+def test_dsms_engine_fault_passthrough_and_precision_report():
+    """Graceful IC degradation (DESIGN.md §6): a resource failure replans
+    through the session fault path and ``StepResult.precision`` reports
+    the per-query loss instead of the engine failing."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced_config
+    from repro.models.params import init_params
+    from repro.serve import DSMSEngine, Query
+
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = DSMSEngine(cfg, params, batch_size=2, max_seq=8)
+    eng.register(Query("alert", mandatory=lambda lg: jnp.max(lg, -1)))
+    eng.register(Query("topk",
+                       mandatory=lambda lg: jax.lax.top_k(lg[:, -1], 3),
+                       optional=lambda r: r, optional_ratio=0.25))
+    res = eng.step(np.zeros(2, np.int64))
+    assert res.precision["alert"] == 1.0     # no optional part
+    assert res.precision["topk"] == \
+        (1.0 if res.precise["topk"] else 1.0 / 1.25)
+
+    replans = eng.replans
+    eng.mark_failed(proc=0)                  # ECU dies mid-stream
+    assert eng.replans == replans + 1
+    assert 0 not in set(np.asarray(eng.plan.proc).tolist())
+    assert eng.scheduler.faults.down_procs == (0,)
+    res = eng.step(res.tokens)               # still serving
+    assert set(res.precision) == {"alert", "topk"}
+    assert all(0.0 < v <= 1.0 for v in res.precision.values())
+
+    link = eng.topology.all_links()[0]
+    eng.degrade(link=link, factor=2.0)
+    assert eng.scheduler.faults.link_factor(link) == 2.0
+    eng.restore(proc=0)
+    eng.restore(link=link)
+    assert eng.scheduler.faults.is_empty
+    res = eng.step(res.tokens)
+    assert res.precision["alert"] == 1.0
