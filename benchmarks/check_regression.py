@@ -75,14 +75,27 @@ def main() -> int:
         ap.error("nothing to check: pass --row, --min-derived and/or "
                  "--max-derived")
 
-    try:
-        base = load_rows(args.baseline, "baseline")
-        fresh = load_rows(args.fresh, "fresh")
-    except GateConfigError as e:
-        print(f"GATE BROKEN: {e}")
-        return 2
+    # Load the snapshots independently so one bad file does not mask
+    # problems with the other (or with the gate specs below): the
+    # exit-2 path must show the FULL list of broken specs in one run.
     failed = broken = False
+    base = fresh = None
+    for attr, which in (("baseline", "baseline"), ("fresh", "fresh")):
+        try:
+            rows = load_rows(getattr(args, attr), which)
+        except GateConfigError as e:
+            print(f"GATE BROKEN: {e}")
+            broken = True
+            continue
+        if which == "baseline":
+            base = rows
+        else:
+            fresh = rows
     for name in args.row:
+        # --row compares across snapshots, so it needs both; the
+        # missing-file message already printed above
+        if base is None or fresh is None:
+            continue
         if name not in base or name not in fresh:
             which = "baseline" if name not in base else "fresh"
             print(f"GATE BROKEN --row {name}: row missing from the "
@@ -104,13 +117,22 @@ def main() -> int:
                 print(f"GATE BROKEN {flag} {spec!r}: expected NAME:VALUE")
                 broken = True
                 continue
+            try:
+                limit = float(bound)
+            except ValueError:
+                print(f"GATE BROKEN {flag} {spec!r}: bound {bound!r} is "
+                      f"not a number")
+                broken = True
+                continue
+            if fresh is None:           # derived gates only need fresh
+                continue
             if name not in fresh:
                 print(f"GATE BROKEN {flag} {name}: row missing from the "
                       f"fresh snapshot")
                 broken = True
                 continue
             value = float(fresh[name][1])
-            bad = value < float(bound) if below else value > float(bound)
+            bad = value < limit if below else value > limit
             status = "FAIL" if bad else "ok"
             print(f"{status} {name}: derived {value:.2f} ({kind} {bound})")
             failed |= bad

@@ -1,0 +1,14 @@
+"""Static invariant analyzer for the scheduling engine.
+
+Three pure-AST passes (no jax/numpy import, nothing executed):
+:mod:`~repro.analysis.kernels` proves the Pallas carried-state and tile
+layout invariants, :mod:`~repro.analysis.lint` enforces the
+bit-exactness/determinism contract of the decision layer, and
+:mod:`~repro.analysis.typing_gate` checks every backend against the
+``CandidateEvaluator`` protocol.  Run with ``python -m repro.analysis``;
+see DESIGN.md §7 for the invariant catalogue.
+"""
+from .cli import ALL_RULES, main
+from .findings import Finding
+
+__all__ = ["ALL_RULES", "Finding", "main"]

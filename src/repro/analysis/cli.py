@@ -1,0 +1,188 @@
+"""``python -m repro.analysis`` — static invariant analyzer entry point.
+
+Two modes:
+
+  * **repo mode** (no paths): scan ``src/repro`` with each rule confined
+    to its repo scope (kernel rules to ``core/backends/``, decision-layer
+    float lint to ``engine.py``/``api.py``, …) and apply the committed
+    ratchet baseline ``analysis-baseline.txt`` at the repo root.
+  * **explicit mode** (paths given): apply *every* rule to exactly those
+    files with no default baseline — this is what the fixture tests use
+    to demonstrate each rule.
+
+Exit codes: 0 clean, 1 findings (or stale baseline entries — the
+ratchet only tightens), 2 broken invocation (missing file, syntax
+error, unknown rule).  All findings print as ``path:line: [rule] msg``.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import kernels, lint, typing_gate
+from .findings import (Finding, apply_baseline, apply_pragmas, fingerprint,
+                       load_baseline)
+
+#: every rule the analyzer knows, with its repo-mode path scope
+ALL_RULES = {**lint.RULES, **kernels.RULES, **typing_gate.RULES}
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+_SRC_ROOT = Path(__file__).resolve().parents[1]        # src/repro
+DEFAULT_BASELINE = "analysis-baseline.txt"
+
+
+def _parse(path: Path) -> Tuple[Optional[ast.Module], List[str], str]:
+    try:
+        text = path.read_text(encoding="utf-8")
+    except OSError as e:
+        return None, [], f"cannot read {path}: {e}"
+    try:
+        return ast.parse(text, filename=str(path)), text.splitlines(), ""
+    except SyntaxError as e:
+        return None, [], f"{path}:{e.lineno}: syntax error: {e.msg}"
+
+
+def _repo_files() -> List[Tuple[Path, str]]:
+    out = []
+    for p in sorted(_SRC_ROOT.rglob("*.py")):
+        rel = p.relative_to(_REPO_ROOT).as_posix()
+        if rel.startswith("src/repro/analysis/"):
+            continue                  # the analyzer does not police itself
+        out.append((p, rel))
+    return out
+
+
+def _collect(files: Sequence[Tuple[Path, str]], repo_mode: bool,
+             rules: Optional[set],
+             ) -> Tuple[List[Finding], Dict[str, List[str]], List[str]]:
+    findings: List[Finding] = []
+    lines_of: Dict[str, List[str]] = {}
+    errors: List[str] = []
+    trees: List[Tuple[str, ast.Module]] = []
+    for path, display in files:
+        tree, lines, err = _parse(path)
+        if tree is None:
+            errors.append(err)
+            continue
+        lines_of[display] = lines
+        trees.append((display, tree))
+        for f in lint.run(display, tree, lines) + \
+                kernels.run(display, tree, lines):
+            findings.append(f)
+    findings.extend(typing_gate.run(trees))
+
+    if repo_mode:
+        findings = [f for f in findings
+                    if f.rule not in ALL_RULES or ALL_RULES[f.rule](f.path)]
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules]
+    findings = apply_pragmas(findings, lines_of)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, lines_of, errors
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant analyzer (kernel races/layout, "
+                    "bit-exactness lint, backend protocol gate)")
+    ap.add_argument("paths", nargs="*",
+                    help="files to analyze with ALL rules; omit to scan "
+                         "the repo with per-rule scopes + baseline")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help=f"ratchet file (repo mode default: "
+                         f"{DEFAULT_BASELINE} at the repo root, if present)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    ap.add_argument("--rules", metavar="ID[,ID...]",
+                    help="restrict to a comma-separated subset of rules")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every rule id and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(ALL_RULES):
+            print(rule)
+        return 0
+
+    rules: Optional[set] = None
+    if args.rules:
+        rules = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = rules - set(ALL_RULES)
+        if unknown:
+            print(f"error: unknown rule(s): {', '.join(sorted(unknown))} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    repo_mode = not args.paths
+    if repo_mode:
+        files = _repo_files()
+    else:
+        files = []
+        for raw in args.paths:
+            p = Path(raw)
+            if not p.is_file():
+                print(f"error: no such file: {raw}", file=sys.stderr)
+                return 2
+            files.append((p, raw))
+
+    findings, lines_of, errors = _collect(files, repo_mode, rules)
+    if errors:
+        for err in errors:
+            print(f"error: {err}", file=sys.stderr)
+        return 2
+
+    fp_of = {f: fingerprint(f, f.path, lines_of.get(f.path, []))
+             for f in findings}
+
+    baseline_path: Optional[Path] = None
+    if args.baseline:
+        baseline_path = Path(args.baseline)
+    elif repo_mode:
+        cand = _REPO_ROOT / DEFAULT_BASELINE
+        if cand.is_file() or args.write_baseline:
+            baseline_path = cand
+
+    if args.write_baseline:
+        if baseline_path is None:
+            print("error: --write-baseline needs --baseline FILE in "
+                  "explicit-path mode", file=sys.stderr)
+            return 2
+        entries = sorted(set(fp_of.values()))
+        header = ("# Ratchet baseline for `python -m repro.analysis`.\n"
+                  "# One fingerprint (path::rule::source-line) per entry —\n"
+                  "# each is a pre-existing finding tolerated until fixed;\n"
+                  "# stale entries FAIL the run so this file only shrinks.\n")
+        baseline_path.write_text(
+            header + "".join(e + "\n" for e in entries), encoding="utf-8")
+        print(f"wrote {len(entries)} baseline entr"
+              f"{'y' if len(entries) == 1 else 'ies'} to {baseline_path}")
+        return 0
+
+    baselined: List[Finding] = []
+    stale: List[str] = []
+    if baseline_path is not None and baseline_path.is_file():
+        entries = load_baseline(str(baseline_path))
+        findings, baselined, stale = apply_baseline(findings, entries, fp_of)
+    elif args.baseline:
+        print(f"error: baseline file {args.baseline!r} does not exist",
+              file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.format())
+    for entry in stale:
+        print(f"stale baseline entry (fix is in — delete the line): {entry}")
+
+    n_files = len(files)
+    if findings or stale:
+        print(f"analysis: {len(findings)} finding(s), {len(stale)} stale "
+              f"baseline entr{'y' if len(stale) == 1 else 'ies'} across "
+              f"{n_files} file(s)")
+        return 1
+    suffix = f" ({len(baselined)} baselined)" if baselined else ""
+    print(f"analysis: clean — {n_files} file(s){suffix}")
+    return 0

@@ -1,0 +1,365 @@
+"""Pallas kernel invariant checker — abstract interpretation of the
+``pallas_call`` structure, never executing (or even importing) jax.
+
+The batched backend carries persistent device state (link-free times,
+processor-free times, loads, winner bookkeeping) across sequential grid
+steps by giving those output blocks a *constant* index map: every grid
+step revisits the same block, so its contents survive step-to-step.
+That design is only sound under three structural invariants, which this
+pass proves on the AST:
+
+  * a carried (revisited) output block must have **exactly one**
+    committed store per grid step — two stores, or a store inside a
+    loop, is a write-write race once steps overlap on real hardware
+    (``kernel-carried-race`` / ``kernel-carried-uncommitted``);
+  * carried blocks require the grid to be 1-D *sequential* — a second
+    grid axis or ``parallel`` dimension semantics would interleave
+    writers (``kernel-grid-carry``);
+  * block shapes must conform to the f32 TPU tile: paddings computed by
+    ``pad_dim`` must target ``SUBLANE_F32`` (=8, P axis) or ``LANE``
+    (=128, L axis) from layout.py (``kernel-tile-pad``).
+
+Plus the dtype policy: kernels take their dtype from the refs
+(``x_ref.dtype``), never from literals, so the f32/f64 switch stays a
+single env-var site (``kernel-dtype``); kernel positional arity must
+match in_specs+out_specs (``kernel-arity``); and the near-tie tolerance
+``F32_NEAR_TIE_RTOL`` is documentation for tests, not something source
+may consume (``kernel-rtol-site``).
+
+Spec classification resolves the local helper-lambda idiom::
+
+    full = lambda *s: pl.BlockSpec(s, lambda i: (0,) * len(s))   # carried
+    dec  = lambda *s: pl.BlockSpec((1,) + s, lambda i: (i,) + …) # blocked
+
+by testing whether the index-map lambda's first parameter appears in its
+body: index maps that ignore the grid index revisit one block (carried).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+PAD_TARGETS = frozenset({"LANE", "SUBLANE_F32"})
+DTYPE_LITERALS = frozenset({"float64", "float32"})
+RTOL_NAME = "F32_NEAR_TIE_RTOL"
+
+_Scope = Callable[[str], bool]
+
+RULES: Dict[str, _Scope] = {
+    "kernel-carried-race":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-carried-uncommitted":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-grid-carry":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-arity":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-tile-pad":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-dtype":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "kernel-rtol-site":
+        lambda rel: rel.startswith("src/repro/"),
+}
+
+
+# ---------------------------------------------------------------- helpers
+
+def _assignments(scope: ast.AST) -> Dict[str, ast.expr]:
+    """name -> value for single-target Name assignments in a scope
+    (module or function body, nested statements included; last wins)."""
+    env: Dict[str, ast.expr] = {}
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+    return env
+
+
+def _functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {node.name: node for node in ast.walk(tree)
+            if isinstance(node, ast.FunctionDef)}
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == "pallas_call"
+    return isinstance(fn, ast.Name) and fn.id == "pallas_call"
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve(node: Optional[ast.expr],
+             env: Dict[str, ast.expr]) -> Optional[ast.expr]:
+    seen = set()
+    while isinstance(node, ast.Name) and node.id in env \
+            and node.id not in seen:
+        seen.add(node.id)
+        node = env[node.id]
+    return node
+
+
+def _lambda_uses_first_param(lam: ast.Lambda) -> bool:
+    params = [a.arg for a in lam.args.args]
+    if not params:
+        return False
+    first = params[0]
+    return any(isinstance(n, ast.Name) and n.id == first
+               for n in ast.walk(lam.body))
+
+
+def _classify_spec(elem: ast.expr, env: Dict[str, ast.expr]) -> Optional[str]:
+    """'carried' | 'blocked' | None (unresolvable) for one spec element."""
+    blockspec: Optional[ast.Call] = None
+    if isinstance(elem, ast.Call) and isinstance(elem.func, ast.Name):
+        helper = _resolve(elem.func, env)
+        if isinstance(helper, ast.Lambda) and isinstance(helper.body, ast.Call):
+            blockspec = helper.body
+    if blockspec is None and isinstance(elem, ast.Call):
+        fn = elem.func
+        if (isinstance(fn, ast.Attribute) and fn.attr == "BlockSpec") or \
+                (isinstance(fn, ast.Name) and fn.id == "BlockSpec"):
+            blockspec = elem
+    if blockspec is None:
+        return None
+    index_map = _kw(blockspec, "index_map")
+    if index_map is None and len(blockspec.args) >= 2:
+        index_map = blockspec.args[1]
+    if not isinstance(index_map, ast.Lambda):
+        return None
+    return "blocked" if _lambda_uses_first_param(index_map) else "carried"
+
+
+def _spec_list(node: Optional[ast.expr],
+               env: Dict[str, ast.expr]) -> Optional[List[ast.expr]]:
+    node = _resolve(node, env)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return None
+
+
+def _resolve_kernel(node: Optional[ast.expr], env: Dict[str, ast.expr],
+                    funcs: Dict[str, ast.FunctionDef]
+                    ) -> Tuple[Optional[ast.FunctionDef], int]:
+    """(kernel FunctionDef, positional args pre-bound by partial)."""
+    node = _resolve(node, env)
+    bound = 0
+    if isinstance(node, ast.Call):            # functools.partial(kern, ...)
+        fn = node.func
+        is_partial = (isinstance(fn, ast.Attribute) and fn.attr == "partial") \
+            or (isinstance(fn, ast.Name) and fn.id == "partial")
+        if is_partial and node.args:
+            bound = len(node.args) - 1        # keywords bind kw-only params
+            node = _resolve(node.args[0], env)
+    if isinstance(node, ast.Name):
+        return funcs.get(node.id), bound
+    if isinstance(node, ast.FunctionDef):
+        return node, bound
+    return None, bound
+
+
+class _StoreCounter:
+    """Counts committed stores per ref name: ``max`` over exclusive
+    if/else branches, ``sum`` over straight-line code; any store under a
+    loop is recorded separately (a loop store re-executes per step)."""
+
+    def __init__(self, names: Sequence[str]) -> None:
+        self.names = set(names)
+        self.loop_stores: Dict[str, int] = {}
+
+    def _stores_in(self, stmt: ast.stmt, in_loop: bool) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Subscript) \
+                        and isinstance(tgt.value, ast.Name) \
+                        and tgt.value.id in self.names:
+                    name = tgt.value.id
+                    if in_loop:
+                        self.loop_stores[name] = \
+                            self.loop_stores.get(name, 0) + 1
+                    else:
+                        counts[name] = counts.get(name, 0) + 1
+        elif isinstance(stmt, ast.If):
+            body = self._stores_block(stmt.body, in_loop)
+            orelse = self._stores_block(stmt.orelse, in_loop)
+            for name in set(body) | set(orelse):
+                counts[name] = max(body.get(name, 0), orelse.get(name, 0))
+        elif isinstance(stmt, (ast.For, ast.While)):
+            self._stores_block(stmt.body, True)
+            self._stores_block(stmt.orelse, in_loop)
+        elif isinstance(stmt, (ast.With, ast.Try)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                block = getattr(stmt, field, None) or []
+                if field == "handlers":
+                    for h in block:
+                        for name, n in self._stores_block(
+                                h.body, in_loop).items():
+                            counts[name] = counts.get(name, 0) + n
+                else:
+                    for name, n in self._stores_block(
+                            block, in_loop).items():
+                        counts[name] = counts.get(name, 0) + n
+        elif isinstance(stmt, ast.FunctionDef):
+            for name, n in self._stores_block(stmt.body, in_loop).items():
+                counts[name] = counts.get(name, 0) + n
+        return counts
+
+    def _stores_block(self, stmts: Sequence[ast.stmt],
+                      in_loop: bool) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for stmt in stmts:
+            for name, n in self._stores_in(stmt, in_loop).items():
+                total[name] = total.get(name, 0) + n
+        return total
+
+    def count(self, body: Sequence[ast.stmt]) -> Dict[str, int]:
+        return self._stores_block(body, False)
+
+
+def _grid_ndim(call: ast.Call, env: Dict[str, ast.expr]) -> Optional[int]:
+    grid = _resolve(_kw(call, "grid"), env)
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts)
+    if isinstance(grid, (ast.Constant, ast.Name)):
+        return 1                              # grid=B scalar form
+    return None
+
+
+def _has_parallel_semantics(call: ast.Call) -> bool:
+    return any(isinstance(n, ast.Constant) and n.value == "parallel"
+               for kw in call.keywords
+               for n in ast.walk(kw.value))
+
+
+# ------------------------------------------------------------------ pass
+
+def _check_call(path: str, call: ast.Call, env: Dict[str, ast.expr],
+                funcs: Dict[str, ast.FunctionDef]) -> List[Finding]:
+    out: List[Finding] = []
+    kernel_expr = call.args[0] if call.args else _kw(call, "kernel")
+    kernel, bound = _resolve_kernel(kernel_expr, env, funcs)
+    in_specs = _spec_list(_kw(call, "in_specs"), env)
+    out_specs = _spec_list(_kw(call, "out_specs"), env)
+    if kernel is None or in_specs is None or out_specs is None:
+        return out                            # structure not statically visible
+
+    n_in, n_out = len(in_specs), len(out_specs)
+    params = [a.arg for a in kernel.args.args][bound:]
+    if _kw(call, "scratch_shapes") is None and len(params) != n_in + n_out:
+        out.append(Finding(
+            "kernel-arity", path, call.lineno,
+            f"kernel {kernel.name} takes {len(params)} positional refs but "
+            f"in_specs+out_specs supply {n_in}+{n_out}={n_in + n_out}"))
+        return out                            # spec->param map is meaningless
+
+    carried_out = [(i, params[n_in + i]) for i, spec in enumerate(out_specs)
+                   if _classify_spec(spec, env) == "carried"]
+
+    if carried_out:
+        ndim = _grid_ndim(call, env)
+        if ndim is not None and ndim > 1:
+            out.append(Finding(
+                "kernel-grid-carry", path, call.lineno,
+                f"{len(carried_out)} carried output block(s) with a "
+                f"{ndim}-D grid — state carry requires a 1-D sequential "
+                f"grid"))
+        if _has_parallel_semantics(call):
+            out.append(Finding(
+                "kernel-grid-carry", path, call.lineno,
+                "carried output blocks with 'parallel' dimension "
+                "semantics — grid steps would interleave writers"))
+
+    counter = _StoreCounter([name for _, name in carried_out])
+    counts = counter.count(kernel.body)
+    for _, name in carried_out:
+        top = counts.get(name, 0)
+        looped = counter.loop_stores.get(name, 0)
+        if looped:
+            out.append(Finding(
+                "kernel-carried-race", path, kernel.lineno,
+                f"carried block {name} is stored inside a loop — carried "
+                f"state must be committed exactly once per grid step"))
+        elif top > 1:
+            out.append(Finding(
+                "kernel-carried-race", path, kernel.lineno,
+                f"carried block {name} has {top} committed stores per grid "
+                f"step — write-write race across sequential revisits"))
+        elif top == 0:
+            out.append(Finding(
+                "kernel-carried-uncommitted", path, kernel.lineno,
+                f"carried block {name} is never stored — its revisited "
+                f"contents would be whatever the previous step left"))
+
+    # dtype policy inside the kernel body
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Attribute) and node.attr in DTYPE_LITERALS:
+            out.append(Finding(
+                "kernel-dtype", path, node.lineno,
+                f"dtype literal .{node.attr} inside kernel {kernel.name} — "
+                f"derive the dtype from a ref (.dtype) so the f32/f64 "
+                f"switch stays one site"))
+        elif isinstance(node, ast.Constant) and node.value in DTYPE_LITERALS:
+            out.append(Finding(
+                "kernel-dtype", path, node.lineno,
+                f"dtype string {node.value!r} inside kernel {kernel.name} — "
+                f"derive the dtype from a ref (.dtype)"))
+    return out
+
+
+def run(path: str, tree: ast.Module, lines: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    funcs = _functions(tree)
+    module_env = _assignments(tree)
+
+    # function scopes first (their local spec/kernel assignments shadow
+    # module ones); whatever remains is a module-level pallas_call
+    checked_kernels = set()
+    scopes: List[ast.AST] = [fn for fn in ast.walk(tree)
+                             if isinstance(fn, (ast.FunctionDef,
+                                                ast.AsyncFunctionDef))]
+    scopes.append(tree)
+    for scope in scopes:
+        env = dict(module_env)
+        if scope is not tree:
+            env.update(_assignments(scope))
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Call) and _is_pallas_call(node) \
+                    and id(node) not in checked_kernels:
+                checked_kernels.add(id(node))
+                out.extend(_check_call(path, node, env, funcs))
+
+    # tile-padding conformance: pad_dim targets must be the layout
+    # constants (or 1 = no padding), anywhere in the file
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "pad_dim" and len(node.args) >= 2:
+            mult = node.args[1]
+            ok = (isinstance(mult, ast.Name) and mult.id in PAD_TARGETS) or \
+                 (isinstance(mult, ast.Constant) and mult.value == 1)
+            if not ok:
+                out.append(Finding(
+                    "kernel-tile-pad", path, node.lineno,
+                    "pad_dim multiple must be layout.SUBLANE_F32 (P axis) "
+                    "or layout.LANE (L axis) — ad-hoc paddings break the "
+                    "f32 TPU tile"))
+
+    # F32_NEAR_TIE_RTOL: definition site only; source must not consume it
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == RTOL_NAME \
+                and isinstance(node.ctx, ast.Load):
+            out.append(Finding(
+                "kernel-rtol-site", path, node.lineno,
+                f"{RTOL_NAME} consumed in source — it documents the "
+                f"near-tie band for tests; decisions must not branch on it"))
+    return out

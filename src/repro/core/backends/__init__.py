@@ -43,9 +43,12 @@ from __future__ import annotations
 
 import importlib.util
 import os
-from typing import Dict, Optional, Type
+from typing import Dict, List, Optional, Type, TYPE_CHECKING
 
 from .base import BackendCompatError, CandidateEvaluator, Decision
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..topology import Topology
 from .scalar import ScalarBackend
 from .vector import VectorBackend
 
@@ -76,7 +79,7 @@ def _pallas_available() -> bool:
     return importlib.util.find_spec("jax") is not None
 
 
-def available_backends() -> list:
+def available_backends() -> List[str]:
     names = set(BACKENDS)
     if _pallas_available():
         names.add(PALLAS)
@@ -101,7 +104,7 @@ def default_backend() -> str:
     return os.environ.get(_ENV_VAR, "auto")
 
 
-def vector_compatible(tg) -> bool:
+def vector_compatible(tg: "Topology") -> bool:
     """Vector batching needs link-disjoint routes (see VectorBackend).
 
     Pure function of the (frozen-by-convention) route tables, memoized
@@ -116,7 +119,8 @@ def vector_compatible(tg) -> bool:
     return ok
 
 
-def resolve_backend_name(backend: Optional[str], P: int, tg) -> str:
+def resolve_backend_name(backend: Optional[str], P: int,
+                         tg: "Topology") -> str:
     """Resolve a requested backend to a concrete registered name.
 
     ``None`` means "the default" (env override or auto); ``"auto"``

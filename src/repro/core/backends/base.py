@@ -33,6 +33,8 @@ from typing import ClassVar, List, Optional, Sequence, Tuple, TYPE_CHECKING
 if TYPE_CHECKING:                                   # pragma: no cover
     from ..engine import CompiledInstance
 
+__all__ = ["BackendCompatError", "CandidateEvaluator", "Decision"]
+
 _INF = float("inf")
 
 
@@ -144,7 +146,8 @@ class CandidateEvaluator(abc.ABC):
 
     # ------------------------------------------------------------- bound
     @staticmethod
-    def crossing(p: int, cand_A, cand_B, alpha: float) -> float:
+    def crossing(p: int, cand_A: Sequence[float], cand_B: Sequence[float],
+                 alpha: float) -> float:
         """Supremum-alpha contribution of one decision (see DESIGN §3).
 
         For winner ``p`` with per-candidate linear selection values

@@ -26,9 +26,15 @@ floats equal the scalar plan cache's bit for bit
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List, Optional, Tuple, TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..engine import CompiledInstance
+
+__all__ = ["LANE", "SUBLANE_F32", "SrcLayout", "edge_ct", "ensure_ct_table",
+           "pad_dim", "padded_edge_ct", "padded_src_tensors", "src_layout"]
 
 _NEG_INF = float("-inf")
 
@@ -64,7 +70,7 @@ class SrcLayout:
                  "av_idx", "base_flat", "w_rows",
                  "spd_rows", "pad_flat", "ct_table")
 
-    def __init__(self, inst, src: int) -> None:
+    def __init__(self, inst: "CompiledInstance", src: int) -> None:
         P = inst.P
         L = inst._n_links
         self.src, self.P, self.L = src, P, L
@@ -121,16 +127,18 @@ class SrcLayout:
                        for h in range(H)]
         # per-edge CTML fill helpers (edge_ct): hop-major speeds for the
         # single-route path, flat pad indices for either shape
+        self.spd_rows: Optional[np.ndarray]
         if R == 1:
             self.spd_rows = np.ascontiguousarray(spd[:, 0, :].T)  # (H, P)
             self.pad_flat = np.flatnonzero(pad[:, 0, :].T.ravel())
         else:
             self.spd_rows = None
             self.pad_flat = np.flatnonzero(pad.ravel())
-        self.ct_table = None         # all-edge CTML table, built lazily
+        # all-edge CTML table, built lazily
+        self.ct_table: Optional[np.ndarray] = None
 
 
-def src_layout(inst, src: int) -> SrcLayout:
+def src_layout(inst: "CompiledInstance", src: int) -> SrcLayout:
     """The (cached) :class:`SrcLayout` of ``src`` for one instance.
 
     The cache lives on the :class:`~..engine.CompiledInstance`
@@ -144,7 +152,7 @@ def src_layout(inst, src: int) -> SrcLayout:
     return lay
 
 
-def ensure_ct_table(inst, lay: SrcLayout) -> np.ndarray:
+def ensure_ct_table(inst: "CompiledInstance", lay: SrcLayout) -> np.ndarray:
     """Eq. 15 CTML tensors of *every* edge from ``lay.src``, in one shot.
 
     Route-tensor precompilation: the first decision that places a task
@@ -182,7 +190,8 @@ def ensure_ct_table(inst, lay: SrcLayout) -> np.ndarray:
     return ct
 
 
-def edge_ct(inst, lay: SrcLayout, i: int, j: int) -> np.ndarray:
+def edge_ct(inst: "CompiledInstance", lay: SrcLayout,
+            i: int, j: int) -> np.ndarray:
     """CTML tensor of edge ``e_ij`` from ``lay.src`` — a row view of the
     precompiled all-edge table (see :func:`ensure_ct_table`)."""
     tab = lay.ct_table
@@ -212,9 +221,9 @@ def pad_dim(x: int, multiple: int) -> int:
     return -(-x // multiple) * multiple
 
 
-def padded_src_tensors(inst, src: int, R: int, H: int, Pp: int,
-                       Lp: int) -> Tuple[np.ndarray, np.ndarray,
-                                         np.ndarray]:
+def padded_src_tensors(inst: "CompiledInstance", src: int, R: int, H: int,
+                       Pp: int, Lp: int) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray]:
     """Route tensors of ``src`` padded to instance-global device dims.
 
     Returns ``(masks, valid, nhops)`` as float64 NumPy arrays (the device
@@ -246,8 +255,8 @@ def padded_src_tensors(inst, src: int, R: int, H: int, Pp: int,
     return masks, valid, nhops
 
 
-def padded_edge_ct(inst, lay: SrcLayout, i: int, j: int, R: int, H: int,
-                   Pp: int) -> np.ndarray:
+def padded_edge_ct(inst: "CompiledInstance", lay: SrcLayout, i: int, j: int,
+                   R: int, H: int, Pp: int) -> np.ndarray:
     """CTML tensor of edge ``e_ij`` from ``lay.src`` padded to the
     instance-global ``(R, H, Pp)`` device shape: hop/route/lane padding
     reads ``-inf`` (a no-op of the Eq. 13-14 max algebra; padded lanes

@@ -571,7 +571,7 @@ class PallasBackend(CandidateEvaluator):
             # the state carry stays on device — never fetched
             self._state = tuple(out[8:])
         win, est, eft, ca_all, cb_all, lst, lft, bestr = \
-            jax.device_get(out[:8])
+            jax.device_get(out[:8])  # analysis: allow[host-sync] the documented one-per-wave transfer (DESIGN.md §5); state carry stays on device
         self.n_roundtrips += 1
 
         decisions: List[Decision] = []

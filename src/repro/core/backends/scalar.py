@@ -12,8 +12,6 @@ from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
-import numpy as np
-
 from .base import CandidateEvaluator, Decision
 
 _INF = float("inf")

@@ -15,11 +15,10 @@ Precision of a task under arrival rate lambda (Experiment 5):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 
-from .graph import SPG
 from .scheduler import Schedule
 
 

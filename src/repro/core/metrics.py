@@ -2,13 +2,7 @@
 SFR (Eq. 26)."""
 from __future__ import annotations
 
-from typing import Iterable
-
-import numpy as np
-
-from .graph import SPG
 from .scheduler import Schedule
-from .topology import Topology
 
 
 def slr(s: Schedule) -> float:

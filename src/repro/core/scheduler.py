@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import SPG
-from .ranks import hprv_a, hprv_b, hrank, ldet_cc, priority_queue, rank_matrix
+from .ranks import ldet_cc
 from .topology import Route, Topology
 
 

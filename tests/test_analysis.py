@@ -1,0 +1,543 @@
+"""Fixture tests for the static invariant analyzer (repro.analysis).
+
+Each rule gets a violating snippet that MUST produce a finding and a
+clean snippet that must NOT (both run through the real CLI entry point
+in explicit-path mode, where every rule applies), plus the baseline /
+pragma mechanics and the self-check that the shipped repo analyzes
+clean.  Everything here is pure-AST — no jax, no kernel execution.
+"""
+import io
+import textwrap
+from contextlib import redirect_stderr, redirect_stdout
+
+import pytest
+
+from repro.analysis import main
+
+# ----------------------------------------------------------------------
+# tiny harness: run the CLI on fixture sources, capture findings
+# ----------------------------------------------------------------------
+
+
+def run_cli(argv):
+    out, err = io.StringIO(), io.StringIO()
+    with redirect_stdout(out), redirect_stderr(err):
+        code = main(argv)
+    return code, out.getvalue(), err.getvalue()
+
+
+def analyze(tmp_path, source, rules=None, name="fixture.py"):
+    path = tmp_path / name
+    path.write_text(textwrap.dedent(source))
+    argv = [str(path)]
+    if rules:
+        argv += ["--rules", rules]
+    return run_cli(argv)
+
+
+def assert_finds(tmp_path, source, rule):
+    code, out, _ = analyze(tmp_path, source, rules=rule)
+    assert code == 1, f"expected a {rule} finding, got exit {code}:\n{out}"
+    assert f"[{rule}]" in out
+    return out
+
+
+def assert_clean(tmp_path, source, rule):
+    code, out, _ = analyze(tmp_path, source, rules=rule)
+    assert code == 0, f"expected clean under {rule}, got:\n{out}"
+
+
+# ----------------------------------------------------------------------
+# lint rules
+# ----------------------------------------------------------------------
+
+
+class TestFloatArith:
+    def test_violation_literal(self, tmp_path):
+        out = assert_finds(tmp_path, """
+            def pick(best, s):
+                if s.makespan < best.makespan - 1e-12:
+                    return s
+                return best
+            """, "float-arith")
+        assert ":3:" in out          # file:line location
+
+    def test_violation_module_const(self, tmp_path):
+        assert_finds(tmp_path, """
+            MARGIN = 1e-6
+            def skip(a, b):
+                return a < b - MARGIN
+            """, "float-arith")
+
+    def test_clean_integer_and_comparison(self, tmp_path):
+        assert_clean(tmp_path, """
+            def pick(best, s, k):
+                n = k + 1
+                if s.makespan < best.makespan:
+                    return s, n
+                return best, n
+            """, "float-arith")
+
+
+class TestSentinelScope:
+    def test_violation_reference(self, tmp_path):
+        assert_finds(tmp_path, """
+            from .faults import DOWN_COMP
+            def mask(comp):
+                comp[0] = DOWN_COMP
+            """, "sentinel-scope")
+
+    def test_violation_attribute(self, tmp_path):
+        assert_finds(tmp_path, """
+            from . import faults
+            def check(eft):
+                return eft < faults.INFEASIBLE_EFT
+            """, "sentinel-scope")
+
+    def test_clean(self, tmp_path):
+        assert_clean(tmp_path, """
+            def mask(comp, value):
+                comp[0] = value
+            """, "sentinel-scope")
+
+
+class TestNondeterminism:
+    def test_violation_wall_clock(self, tmp_path):
+        assert_finds(tmp_path, """
+            import time
+            def stamp():
+                return time.time()
+            """, "nondeterminism")
+
+    def test_violation_legacy_np_random(self, tmp_path):
+        assert_finds(tmp_path, """
+            import numpy as np
+            def jitter(n):
+                return np.random.rand(n)
+            """, "nondeterminism")
+
+    def test_clean_seeded_generator(self, tmp_path):
+        assert_clean(tmp_path, """
+            import time
+            import numpy as np
+            def jitter(n, seed):
+                t0 = time.monotonic()
+                rng = np.random.default_rng(seed)
+                return rng.random(n), time.monotonic() - t0
+            """, "nondeterminism")
+
+
+class TestSetIteration:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, """
+            def procs(schedule):
+                return [p for p in set(schedule.values())]
+            """, "set-iteration")
+
+    def test_clean_sorted(self, tmp_path):
+        assert_clean(tmp_path, """
+            def procs(schedule):
+                return [p for p in sorted(set(schedule.values()))]
+            """, "set-iteration")
+
+
+class TestDeprecationRoute:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, """
+            import warnings
+            def old_entry():
+                warnings.warn("use Scheduler", DeprecationWarning,
+                              stacklevel=2)
+            """, "deprecation-route")
+
+    def test_clean_warn_once(self, tmp_path):
+        assert_clean(tmp_path, """
+            from .deprecation import warn_once
+            def old_entry():
+                warn_once("old_entry", "use Scheduler")
+            """, "deprecation-route")
+
+
+class TestHostSync:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, """
+            def fetch(out):
+                import jax
+                return jax.device_get(out)
+            """, "host-sync")
+
+    def test_clean(self, tmp_path):
+        assert_clean(tmp_path, """
+            def fetch(out):
+                return out
+            """, "host-sync")
+
+
+class TestUnusedImport:
+    def test_violation(self, tmp_path):
+        out = assert_finds(tmp_path, """
+            import os
+            import sys
+            def main():
+                return sys.argv
+            """, "unused-import")
+        assert "'os'" in out and "'sys'" not in out
+
+    def test_clean_quoted_annotation_and_all(self, tmp_path):
+        assert_clean(tmp_path, """
+            from typing import TYPE_CHECKING
+            from os import path
+            if TYPE_CHECKING:
+                from collections import OrderedDict
+            __all__ = ["path", "use"]
+            def use(d: "OrderedDict") -> "OrderedDict":
+                return d
+            """, "unused-import")
+
+
+# ----------------------------------------------------------------------
+# kernel rules
+# ----------------------------------------------------------------------
+
+# A miniature of the real backend idiom: helper lambdas build the
+# BlockSpecs, carried out-blocks have a constant index map, the kernel
+# resolves through functools.partial.
+KERNEL_TEMPLATE = """\
+import functools
+import jax.experimental.pallas as pl
+
+def _kernel(x_ref, y_ref, state_ref, *, K):
+{body}
+
+def build(B, K, shapes):
+    full = lambda *s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    dec = lambda *s: pl.BlockSpec((1,) + s, lambda i: (i,) + (0,) * len(s))
+    in_specs = [dec(K)]
+    out_specs = [dec(K), full(K)]
+    kern = functools.partial(_kernel, K=K)
+    return pl.pallas_call(kern, grid={grid}, in_specs=in_specs,
+                          out_specs=out_specs, out_shape=shapes)
+"""
+
+
+def kernel_fixture(body, grid="(B,)"):
+    indented = "\n".join("    " + ln if ln.strip() else ln
+                         for ln in textwrap.dedent(body).strip().splitlines())
+    return KERNEL_TEMPLATE.format(body=indented, grid=grid)
+
+
+GOOD_BODY = """
+    val = x_ref[0] + state_ref[0]
+    y_ref[0] = val
+    state_ref[0] = val
+"""
+
+
+class TestKernelCarried:
+    def test_clean_single_commit(self, tmp_path):
+        assert_clean(tmp_path, kernel_fixture(GOOD_BODY),
+                     "kernel-carried-race,kernel-carried-uncommitted")
+
+    def test_race_double_store(self, tmp_path):
+        assert_finds(tmp_path, kernel_fixture("""
+            val = x_ref[0] + state_ref[0]
+            y_ref[0] = val
+            state_ref[0] = val
+            state_ref[1] = val
+            """), "kernel-carried-race")
+
+    def test_race_store_in_loop(self, tmp_path):
+        assert_finds(tmp_path, kernel_fixture("""
+            val = x_ref[0]
+            y_ref[0] = val
+            for h in range(4):
+                state_ref[h] = val
+            """), "kernel-carried-race")
+
+    def test_exclusive_branches_are_one_commit(self, tmp_path):
+        assert_clean(tmp_path, kernel_fixture("""
+            val = x_ref[0]
+            y_ref[0] = val
+            if K > 1:
+                state_ref[0] = val
+            else:
+                state_ref[0] = -val
+            """), "kernel-carried-race,kernel-carried-uncommitted")
+
+    def test_uncommitted(self, tmp_path):
+        assert_finds(tmp_path, kernel_fixture("""
+            y_ref[0] = x_ref[0] + state_ref[0]
+            """), "kernel-carried-uncommitted")
+
+
+class TestKernelGridCarry:
+    def test_violation_2d_grid(self, tmp_path):
+        assert_finds(tmp_path, kernel_fixture(GOOD_BODY, grid="(B, K)"),
+                     "kernel-grid-carry")
+
+    def test_clean_1d_grid(self, tmp_path):
+        assert_clean(tmp_path, kernel_fixture(GOOD_BODY),
+                     "kernel-grid-carry")
+
+
+class TestKernelArity:
+    def test_violation(self, tmp_path):
+        # 3 kernel refs but 1+3 specs supplied
+        src = kernel_fixture(GOOD_BODY).replace(
+            "out_specs = [dec(K), full(K)]",
+            "out_specs = [dec(K), dec(K), full(K)]")
+        assert_finds(tmp_path, src, "kernel-arity")
+
+    def test_clean(self, tmp_path):
+        assert_clean(tmp_path, kernel_fixture(GOOD_BODY), "kernel-arity")
+
+
+class TestKernelTilePad:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, """
+            from .layout import pad_dim
+            def dims(P, L):
+                return pad_dim(P, 4), pad_dim(L, 128)
+            """, "kernel-tile-pad")
+
+    def test_clean(self, tmp_path):
+        assert_clean(tmp_path, """
+            from .layout import LANE, SUBLANE_F32, pad_dim
+            def dims(P, L, tile):
+                if tile:
+                    return pad_dim(P, SUBLANE_F32), pad_dim(L, LANE)
+                return pad_dim(P, 1), pad_dim(L, 1)
+            """, "kernel-tile-pad")
+
+
+class TestKernelDtype:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, kernel_fixture("""
+            import jax.numpy as jnp
+            val = x_ref[0].astype(jnp.float64)
+            y_ref[0] = val
+            state_ref[0] = val
+            """), "kernel-dtype")
+
+    def test_clean_ref_dtype(self, tmp_path):
+        assert_clean(tmp_path, kernel_fixture("""
+            f = x_ref.dtype
+            val = x_ref[0].astype(f)
+            y_ref[0] = val
+            state_ref[0] = val
+            """), "kernel-dtype")
+
+
+class TestKernelRtolSite:
+    def test_violation(self, tmp_path):
+        assert_finds(tmp_path, """
+            F32_NEAR_TIE_RTOL = 1e-5
+            def near(a, b):
+                return abs(a - b) <= F32_NEAR_TIE_RTOL * abs(b)
+            """, "kernel-rtol-site")
+
+    def test_clean_definition_only(self, tmp_path):
+        assert_clean(tmp_path, """
+            F32_NEAR_TIE_RTOL = 1e-5
+            """, "kernel-rtol-site")
+
+
+# ----------------------------------------------------------------------
+# typing gate rules
+# ----------------------------------------------------------------------
+
+PROTOCOL = """
+    import abc
+
+    class CandidateEvaluator(abc.ABC):
+        name = "base"
+
+        @abc.abstractmethod
+        def _alloc(self):
+            ...
+
+        @abc.abstractmethod
+        def evaluate(self, j):
+            ...
+
+        def evaluate_batch(self, js):
+            return [self.evaluate(j) for j in js]
+"""
+
+
+class TestTypingGate:
+    def test_protocol_missing(self, tmp_path):
+        assert_finds(tmp_path, PROTOCOL + """
+            class HalfBackend(CandidateEvaluator):
+                name = "half"
+                def _alloc(self):
+                    ...
+            """, "protocol-missing")
+
+    def test_protocol_signature(self, tmp_path):
+        out = assert_finds(tmp_path, PROTOCOL + """
+            class RenamedBackend(CandidateEvaluator):
+                name = "renamed"
+                def _alloc(self):
+                    ...
+                def evaluate(self, task):
+                    ...
+            """, "protocol-signature")
+        assert "evaluate" in out
+
+    def test_protocol_extra_arg_without_default(self, tmp_path):
+        assert_finds(tmp_path, PROTOCOL + """
+            class GreedyBackend(CandidateEvaluator):
+                name = "greedy"
+                def _alloc(self):
+                    ...
+                def evaluate(self, j, extra):
+                    ...
+            """, "protocol-signature")
+
+    def test_backend_name(self, tmp_path):
+        assert_finds(tmp_path, PROTOCOL + """
+            class AnonBackend(CandidateEvaluator):
+                def _alloc(self):
+                    ...
+                def evaluate(self, j):
+                    ...
+            """, "backend-name")
+
+    def test_clean_backend(self, tmp_path):
+        assert_clean(tmp_path, PROTOCOL + """
+            class GoodBackend(CandidateEvaluator):
+                name = "good"
+                def _alloc(self):
+                    ...
+                def evaluate(self, j):
+                    ...
+                def evaluate_batch(self, js, chunk=4):
+                    return super().evaluate_batch(js)
+            """, "protocol-missing,protocol-signature,backend-name")
+
+
+# ----------------------------------------------------------------------
+# suppression pragma + ratchet baseline mechanics
+# ----------------------------------------------------------------------
+
+
+class TestPragma:
+    def test_justified_pragma_suppresses(self, tmp_path):
+        assert_clean(tmp_path, """
+            def pick(best, s):
+                # analysis: allow[float-arith] comparison epsilon, not a decision value
+                if s.makespan < best.makespan - 1e-12:
+                    return s
+                return best
+            """, "float-arith")
+
+    def test_pragma_without_reason_is_a_finding(self, tmp_path):
+        code, out, _ = analyze(tmp_path, """
+            def pick(best, s):
+                # analysis: allow[float-arith]
+                if s.makespan < best.makespan - 1e-12:
+                    return s
+                return best
+            """)
+        assert code == 1
+        assert "[allow-without-reason]" in out
+
+    def test_pragma_is_rule_specific(self, tmp_path):
+        assert_finds(tmp_path, """
+            def pick(best, s):
+                # analysis: allow[host-sync] wrong rule id
+                if s.makespan < best.makespan - 1e-12:
+                    return s
+                return best
+            """, "float-arith")
+
+
+class TestBaseline:
+    SRC = """
+        def pick(best, s):
+            if s.makespan < best.makespan - 1e-12:
+                return s
+            return best
+        """
+
+    def test_baselined_finding_passes_and_stale_fails(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text(textwrap.dedent(self.SRC))
+        baseline = tmp_path / "baseline.txt"
+
+        code, _, _ = run_cli([str(path), "--rules", "float-arith",
+                              "--baseline", str(baseline),
+                              "--write-baseline"])
+        assert code == 0
+        assert "float-arith" in baseline.read_text()
+
+        code, out, _ = run_cli([str(path), "--rules", "float-arith",
+                                "--baseline", str(baseline)])
+        assert code == 0, out          # tolerated by the ratchet
+
+        # fix the code: the baseline entry goes stale and must be removed
+        path.write_text(textwrap.dedent("""
+            def pick(best, s):
+                if s.makespan < best.makespan:
+                    return s
+                return best
+            """))
+        code, out, _ = run_cli([str(path), "--rules", "float-arith",
+                                "--baseline", str(baseline)])
+        assert code == 1
+        assert "stale baseline entry" in out
+
+    def test_missing_baseline_file_is_config_error(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("x = 1\n")
+        code, _, err = run_cli([str(path),
+                                "--baseline", str(tmp_path / "nope.txt")])
+        assert code == 2
+        assert "does not exist" in err
+
+
+# ----------------------------------------------------------------------
+# CLI plumbing + repo self-check
+# ----------------------------------------------------------------------
+
+
+class TestCli:
+    def test_unknown_rule_is_config_error(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("x = 1\n")
+        code, _, err = run_cli([str(path), "--rules", "no-such-rule"])
+        assert code == 2
+        assert "no-such-rule" in err
+
+    def test_syntax_error_is_config_error(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("def broken(:\n")
+        code, _, err = run_cli([str(path)])
+        assert code == 2
+        assert "syntax error" in err
+
+    def test_list_rules_covers_all_passes(self):
+        code, out, _ = run_cli(["--list-rules"])
+        assert code == 0
+        rules = set(out.split())
+        for rule in ("kernel-carried-race", "kernel-tile-pad",
+                     "kernel-dtype", "float-arith", "sentinel-scope",
+                     "nondeterminism", "host-sync", "unused-import",
+                     "protocol-missing", "protocol-signature"):
+            assert rule in rules
+
+    def test_findings_carry_file_line_locations(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("import os\nx = 1\n")
+        code, out, _ = run_cli([str(path), "--rules", "unused-import"])
+        assert code == 1
+        assert f"{path}:1: [unused-import]" in out
+
+
+def test_shipped_repo_analyzes_clean():
+    """The acceptance gate: repo mode (scoped rules + committed ratchet
+    baseline) over the shipped tree exits 0."""
+    code, out, _ = run_cli([])
+    assert code == 0, f"shipped tree has analyzer findings:\n{out}"
+    assert "clean" in out
