@@ -1,0 +1,142 @@
+"""Exp 10 (beyond-paper) — serving-layer throughput (DESIGN.md §8).
+
+A seeded 8-tenant request trace is driven through
+:class:`repro.service.SchedulerService` twice — coalescing on and off —
+over a P=8 switched network.  Each tenant issues one burst of 4
+registrations followed by 3 bursts of 3 drift updates (all tenants
+concurrently; the per-tenant debounce folds each burst into one fleet
+``submit_many`` / one batched suffix-replay ``update``).
+
+Rows:
+
+  * ``exp10.svc.t8.request_us`` — mean wall time per request with
+    coalescing on; derived = sustained requests (schedules) per second.
+  * ``exp10.svc.t8.p99_replan_us`` — p99 replan latency (us); derived =
+    p99/mean replan-latency ratio (machine-independent tail metric,
+    CI ceiling 25.0).
+  * ``exp10.svc.t8.coalescing_replans`` — wall time of the coalesced
+    run; derived = uncoalesced/coalesced scheduler-invocation ratio
+    (CI floor 2.0 — the coalescing lever itself).
+
+The run *asserts* the acceptance contract before emitting rows: the
+final plan views of the coalesced and uncoalesced runs are identical,
+and each tenant's final fleet schedule is bit-identical to a direct
+fresh single-session ``Scheduler.submit_many`` on the same final state
+(graphs after drift, faults, pinned period).
+
+``engine`` is accepted for driver compatibility but ignored: the
+service always runs compiled sessions (the serving layer exists to
+exploit their incremental replay).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import HVLB_CC_B, Scheduler, fully_switched_topology, random_spg
+from repro.service import SchedulerService
+
+from .common import row, timed
+
+_RATES = [1.0, 1.2, 0.9, 1.1, 1.3, 0.95, 1.05, 0.8]
+_SPEEDS = [1.0, 2.0, 1.5, 1.0, 3.0, 2.5, 1.0, 2.0]
+_TENANTS = 8
+_GRAPHS = 4
+_BURSTS = 3          # update bursts per tenant
+_EVENTS = 3          # drift events per burst
+
+
+def _make_trace(full: bool):
+    tg = fully_switched_topology(8, _RATES, _SPEEDS)
+    n = 28 if full else 14
+    tenants = []
+    for t in range(_TENANTS):
+        rng = np.random.default_rng(10_000 + t)
+        graphs = [random_spg(n, rng, ccr=1.0, tg=tg,
+                             outdeg_constraint=True)
+                  for _ in range(_GRAPHS)]
+        for k, g in enumerate(graphs):
+            g.name = f"t{t}g{k}"
+        bursts = [[(f"t{t}g{int(rng.integers(_GRAPHS))}",
+                    int(rng.integers(n)),
+                    float(rng.uniform(0.7, 1.4)))
+                   for _ in range(_EVENTS)]
+                  for _ in range(_BURSTS)]
+        tenants.append((f"tenant{t}", graphs, bursts))
+    return tg, tenants
+
+
+async def _drive(svc: SchedulerService, tenants):
+    clients = {name: svc.client(name) for name, _, _ in tenants}
+    # concurrent registration bursts, one per tenant
+    futs = [asyncio.ensure_future(clients[name].register(g, name=g.name))
+            for name, graphs, _ in tenants for g in graphs]
+    for resp in await asyncio.gather(*futs):
+        assert resp.ok, resp.error
+    # drift bursts (all tenants concurrently, burst by burst)
+    for b in range(_BURSTS):
+        futs = [asyncio.ensure_future(
+                    clients[name].update(task_rates={task: f},
+                                         graph=gname))
+                for name, _, bursts in tenants
+                for gname, task, f in bursts[b]]
+        for resp in await asyncio.gather(*futs):
+            assert resp.ok, resp.error
+    # final plan views
+    finals = {}
+    for name, graphs, _ in tenants:
+        for g in graphs:
+            resp = await clients[name].plan(graph=g.name)
+            assert resp.ok, resp.error
+            finals[(name, g.name)] = resp.result
+    return finals
+
+
+def run(full: bool = False, engine: str = "compiled",
+        backend: Optional[str] = None) -> List[str]:
+    del engine                      # service sessions are always compiled
+    tg, tenants = _make_trace(full)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+
+    def _run(coalesce: bool):
+        svc = SchedulerService(tg, policy, workers=4,
+                               coalesce=coalesce, backend=backend)
+        finals = asyncio.run(_drive(svc, tenants))
+        return svc, finals
+
+    (svc_on, fin_on), us_on = timed(_run, True)
+    (svc_off, fin_off), _ = timed(_run, False)
+
+    # responses must not depend on coalescing at all
+    assert fin_on == fin_off, "coalesced/uncoalesced responses diverge"
+    # ... and must match a direct single-session Scheduler on the final
+    # state (graphs after drift, recorded faults, pinned fleet period)
+    for name, graphs, _ in tenants:
+        t = svc_on._tenants[name]
+        view = fin_on[(name, graphs[0].name)]
+        fresh = Scheduler(
+            t.topology,
+            policy=dataclasses.replace(policy, period=view["period"]),
+            faults=t.fault_records)
+        fleet = fresh.submit_many(list(t.graphs.values()))
+        assert float(fleet.makespan) == view["makespan"]
+        assert [int(x) for x in fleet.subschedule(0).proc] == view["proc"]
+
+    n_req = svc_on.stats.requests
+    mean_us = svc_on.stats.mean_replan_latency_s() * 1e6
+    p99_us = svc_on.stats.p99_replan_latency_s() * 1e6
+    ratio = svc_off.stats.replans / svc_on.stats.replans
+    return [
+        row("exp10.svc.t8.request_us", us_on / n_req,
+            n_req / (us_on / 1e6)),
+        row("exp10.svc.t8.p99_replan_us", p99_us,
+            p99_us / mean_us if mean_us else 0.0),
+        row("exp10.svc.t8.coalescing_replans", us_on, ratio),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -35,6 +35,7 @@ MODULES = [
     "exp7_engine_scaling",    # compiled-engine throughput scaling
     "exp8_session_api",       # incremental update + fleet submit_many
     "exp9_faults",            # fault-recovery latency + prefix survival
+    "exp10_service",          # serving layer: coalescing + replan tail
     "roofline",               # §Roofline summary rows from the dry-run
 ]
 

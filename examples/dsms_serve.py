@@ -59,3 +59,51 @@ for t in range(8):
           f"alert={np.asarray(res.query_outputs['alert']).round(3).tolist()} "
           f"{prec}")
 print("done.")
+
+
+# ----------------------------------------------------------------------
+# Scheduler-as-a-service quickstart (DESIGN.md §8).  Many logical
+# clients share one async service: bursts of registrations coalesce into
+# ONE submit_many fleet replan, bursts of drift updates into ONE batched
+# suffix-replay update; tenants are sharded across worker lanes by
+# consistent hashing.  (`python -m repro.service` serves the same ops
+# over newline-delimited JSON on TCP.)
+import asyncio                                             # noqa: E402
+
+from repro.core import fully_switched_topology, random_spg  # noqa: E402
+from repro.service import SchedulerService                  # noqa: E402
+
+
+async def service_quickstart():
+    tg = fully_switched_topology(4, rates=[1.0, 1.1, 0.9, 1.2],
+                                 link_speeds=[1.0, 1.5, 0.9, 1.2])
+    svc = SchedulerService(tg, workers=2)
+    car = svc.client("carA")
+    rng = np.random.default_rng(0)
+    graphs = [random_spg(10, rng, tg=tg) for _ in range(3)]
+
+    # a burst of registrations -> ONE fleet replan
+    resps = await asyncio.gather(*[
+        asyncio.ensure_future(car.register(g, name=f"q{k}"))
+        for k, g in enumerate(graphs)])
+    print(f"service: registered {len(resps)} query graphs with "
+          f"{svc.stats.replans} replan; fleet makespan="
+          f"{resps[0].result['makespan']:.3f}")
+
+    # a burst of drift reports -> ONE batched suffix replay
+    resps = await asyncio.gather(
+        asyncio.ensure_future(car.update(task_rates={2: 1.5}, graph="q0")),
+        asyncio.ensure_future(car.update(task_rates={4: 0.8}, graph="q1")))
+    print(f"service: 2 drift updates folded into "
+          f"{resps[0].result['replay']['coalesced']}-event replay "
+          f"({svc.stats.replans} replans total)")
+
+    # faults surface as structured responses, not exceptions
+    resp = await car.mark_failed(proc=3)
+    print(f"service: proc 3 down -> ok={resp.ok}, "
+          f"makespan={resp.result['makespan']:.3f}, "
+          f"faults={resp.result['faults']}")
+
+
+asyncio.run(service_quickstart())
+print("service quickstart done.")

@@ -55,17 +55,26 @@ def _core_not(*basenames: str) -> _Scope:
                         and rel.rsplit("/", 1)[-1] not in basenames)
 
 
+def _sched_pkgs(rel: str) -> bool:
+    """The deterministic scheduling surface: the core engine AND the
+    async serving layer on top of it (repro.service) — both must stay
+    reproducible for the chaos/bit-identity oracles to hold."""
+    return (rel.startswith("src/repro/core/")
+            or rel.startswith("src/repro/service/"))
+
+
 #: rule-id -> repo-mode scope predicate over repo-relative posix paths
 RULES: Dict[str, _Scope] = {
     "float-arith": lambda rel: rel in ("src/repro/core/engine.py",
                                        "src/repro/core/api.py"),
     "sentinel-scope": _core_not("faults.py", "engine.py"),
-    "nondeterminism": _in("src/repro/core/"),
-    "set-iteration": _in("src/repro/core/"),
+    "nondeterminism": _sched_pkgs,
+    "set-iteration": _sched_pkgs,
     "deprecation-route": lambda rel: (rel.startswith("src/repro/")
                                       and rel != "src/repro/core/deprecation.py"),
     "host-sync": _in("src/repro/core/backends/"),
-    "unused-import": _core_not("__init__.py"),
+    "unused-import": lambda rel: (_sched_pkgs(rel)
+                                  and rel.rsplit("/", 1)[-1] != "__init__.py"),
 }
 
 
@@ -153,6 +162,18 @@ def _check_nondeterminism(path: str, tree: ast.Module) -> List[Finding]:
                     "nondeterminism", path, node.lineno,
                     f"legacy np.random.{node.attr} uses the global "
                     f"RandomState — use np.random.default_rng(seed)"))
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "time" \
+                and not (isinstance(node.func.value, ast.Name)
+                         and node.func.value.id == "time"):
+            # loop.time() / self._loop.time(): the asyncio event-loop
+            # clock (time.time() itself is caught by the branch above)
+            out.append(Finding(
+                "nondeterminism", path, node.lineno,
+                "event-loop clock read (.time()) — scheduling decisions "
+                "must not depend on it; latency accounting needs a "
+                "justified allow pragma"))
         elif isinstance(node, ast.ImportFrom):
             if node.module == "time":
                 for alias in node.names:

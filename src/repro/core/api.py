@@ -128,6 +128,12 @@ class HVLB_CC_A:
     period: Optional[float] = None
     sweep: str = "grid"
     coarse_factor: int = 10
+    # adaptive-sweep refinement band: coarse grid points whose makespan is
+    # within this *factor* of the coarse optimum get their neighbourhood
+    # re-swept at the fine step (1.02 = the 2% band).  Pure sweep-cost
+    # heuristic — it decides which alphas are simulated, never how any
+    # committed decision is valued.
+    refine_within: float = 1.02
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +203,11 @@ class ReplayStats:
     # on fault-triggered replans; 0 on submits and benign-drift updates):
     # the prefix-survival counter asserted by the chaos tests / exp9
     invalidated_by_fault: int = 0
+    # perturbation events folded into this replay: 1 for a submit or a
+    # plain single-dict update, k when a batched ``update`` coalesced k
+    # task-rate/link-speed dicts into one combined suffix replay (the
+    # service coalescing layer's replan-count lever, exp10)
+    coalesced: int = 1
 
 
 @dataclasses.dataclass
@@ -356,23 +367,38 @@ class _GraphSession:
         return self.g.default_period(tg.rates, tg.n_procs)
 
 
-def _rescaled_graph(g: SPG, task_rates: Dict[int, float]) -> SPG:
+def _rescaled_graph(g: SPG, events: Sequence[Dict[int, float]]) -> SPG:
     """The graph after arrival-rate drift: task ``t``'s computational
-    volume scales by ``task_rates[t]`` (Eq. 19's lambda on the mandatory
-    part).  Structure, explicit edge volumes, and names are preserved."""
+    volume scales by ``ev[t]`` for each event dict in order (Eq. 19's
+    lambda on the mandatory part).  Factors are applied sequentially —
+    ``(w * f1) * f2``, never ``w * (f1 * f2)`` — so one batched replay is
+    bit-identical to replaying the events one ``update()`` at a time.
+    Structure, explicit edge volumes, and names are preserved."""
     w = g.weights.copy()
     cm = None if g.comp_matrix is None else np.array(g.comp_matrix,
                                                      dtype=float)
-    for t, f in task_rates.items():
-        if not 0 <= t < g.n:
-            raise ValueError(f"task {t} out of range")
-        w[t] *= f
-        if cm is not None:
-            cm[t] *= f
+    for ev in events:
+        for t, f in ev.items():
+            if not 0 <= t < g.n:
+                raise ValueError(f"task {t} out of range")
+            w[t] *= f
+            if cm is not None:
+                cm[t] *= f
     g2 = SPG(n=g.n, edges=list(g.edges), weights=w, tpl=dict(g.tpl),
              tpl_proportional_ccr=g.tpl_proportional_ccr,
              comp_matrix=cm, name=g.name)
     return g2
+
+
+def _as_events(arg) -> List[dict]:
+    """Normalize an ``update`` perturbation argument — one dict or a
+    sequence of dicts (a batch of drift events, oldest first) — to a
+    list of dicts."""
+    if arg is None:
+        return []
+    if isinstance(arg, dict):
+        return [arg]
+    return [dict(ev) for ev in arg]
 
 
 def _disjoint_union(graphs: Sequence[SPG], tg: Topology) -> Tuple[SPG,
@@ -612,7 +638,7 @@ class Scheduler:
             return queue_len
         if self.engine != "compiled":
             return 0
-        new_sess = _GraphSession(_rescaled_graph(sess.g, changed),
+        new_sess = _GraphSession(_rescaled_graph(sess.g, [changed]),
                                  self.topology, compiled=True,
                                  faults=self._spec)
         prefix = self._clean_prefix(sess, new_sess, policy)
@@ -620,8 +646,11 @@ class Scheduler:
                        new_sess, prefix)
         return prefix
 
-    def update(self, *, task_rates: Optional[Dict[int, float]] = None,
-               link_speed: Optional[Dict[str, float]] = None,
+    def update(self, *,
+               task_rates: Union[Dict[int, float],
+                                 Sequence[Dict[int, float]], None] = None,
+               link_speed: Union[Dict[str, float],
+                                 Sequence[Dict[str, float]], None] = None,
                graph: Optional[SPG] = None,
                policy: Optional[Policy] = None,
                backend: Optional[str] = None,
@@ -632,26 +661,40 @@ class Scheduler:
         computational volume; ``link_speed`` overrides named link speeds
         of the session topology (which invalidates every cached instance
         — LDET and all message timings change, so the whole trace is
-        re-simulated).  ``graph`` selects which submitted graph to update
-        (default: the most recently submitted).  The returned plan is
-        bit-identical to a from-scratch ``submit`` of the modified graph
-        under the same pinned period (``Plan.period``).
+        re-simulated).  Both accept either one dict or a *sequence* of
+        dicts — a batch of pending perturbation events, oldest first —
+        in which case the k events are folded into ONE combined suffix
+        replay (task factors compose sequentially, later link-speed
+        overrides win) whose result is bit-identical to applying the
+        events through k separate ``update()`` calls;
+        ``ReplayStats.coalesced`` records the fold.  This is the
+        coalescing primitive of the serving layer (``repro.service``).
+        ``graph`` selects which submitted graph to update (default: the
+        most recently submitted).  The returned plan is bit-identical to
+        a from-scratch ``submit`` of the modified graph under the same
+        pinned period (``Plan.period``).
         """
         policy = self.policy if policy is None else policy
         sess = self._session_of(graph)
         if sess is None:
             raise ValueError("update() before any submit(): the session "
                              "has no graph to re-plan")
-        if task_rates:
-            check_task_rates(task_rates, sess.g.n)
-        if link_speed:
-            check_link_speeds(link_speed, self.topology)
-        changed = {t: f for t, f in (task_rates or {}).items() if f != 1.0}
-        link_changed = bool(link_speed)
+        tr_events = _as_events(task_rates)
+        ls_events = [ev for ev in _as_events(link_speed) if ev]
+        for ev in tr_events:
+            check_task_rates(ev, sess.g.n)
+        for ev in ls_events:
+            check_link_speeds(ev, self.topology)
+        changed_events = [ce for ce in
+                          ({t: f for t, f in ev.items() if f != 1.0}
+                           for ev in tr_events) if ce]
+        link_changed = bool(ls_events)
+        n_events = len(changed_events) + len(ls_events)
 
         if link_changed:
             speeds = dict(self.topology.link_speed)
-            speeds.update(link_speed)
+            for ev in ls_events:
+                speeds.update(ev)
             self.topology = Topology(
                 list(self.topology.proc_names), self.topology.rates.copy(),
                 speeds, {pair: list(rr)
@@ -660,19 +703,21 @@ class Scheduler:
             # every compiled instance embeds the old link speeds
             self._sessions = {}
 
-        if not changed and not link_changed:
+        if not changed_events and not link_changed:
             self._sessions[id(sess.g)] = sess
             self._last = sess
             return self.submit(sess.g, policy, backend=backend, batch=batch)
 
         probe = self._probe
         self._probe = None
-        if probe is not None and not link_changed and \
-                probe[:3] == (sess, policy, tuple(sorted(changed.items()))):
+        if probe is not None and not link_changed \
+                and len(changed_events) == 1 and probe[:3] == (
+                    sess, policy, tuple(sorted(changed_events[0].items()))):
             new_sess, suffix_start = probe[3], probe[4]
             new_g = new_sess.g
         else:
-            new_g = _rescaled_graph(sess.g, changed) if changed else sess.g
+            new_g = _rescaled_graph(sess.g, changed_events) \
+                if changed_events else sess.g
             new_sess = _GraphSession(new_g, self.topology,
                                      compiled=self.engine == "compiled",
                                      faults=self._spec)
@@ -690,6 +735,7 @@ class Scheduler:
         plan = self._plan_fb(new_sess, policy, prev_traces=prev_traces,
                              suffix_start=suffix_start, backend=bname,
                              batch=bcap, pending=pending)
+        plan.replay.coalesced = max(1, n_events)
         new_sess.plans[(policy, bname, bcap)] = plan
         # the originally submitted handle and the new graph both address
         # this session; every map entry still pointing at the superseded
@@ -1094,8 +1140,8 @@ class Scheduler:
                 coarse.append(n_steps * step)
             best, best_alpha = grid_pass(coarse, points, None, 0.0)
             assert best is not None
-            # refine around every coarse point within 2% of the optimum
-            cutoff = best.makespan * 1.02
+            # refine around every coarse point within the policy's band
+            cutoff = best.makespan * policy.refine_within
             refine: set = set()
             for a, m in points:
                 if m <= cutoff:

@@ -117,9 +117,15 @@ class DSMSEngine:
                              for qi in range(len(self.queries))}
         self._dirty = False
 
-    def retime(self, task_rates: Dict[int, float]) -> None:
+    def retime(self, task_rates) -> None:
         """Re-plan after task computation-time drift (Section 4.4's varying
-        arrival rates) via the incremental ``Scheduler.update`` path."""
+        arrival rates) via the incremental ``Scheduler.update`` path.
+
+        Accepts either one ``{task: factor}`` dict or a sequence of such
+        dicts (a pending batch of drift events, oldest first) — the batch
+        is folded into one combined suffix replay, bit-identical to
+        applying the events one ``retime`` at a time.
+        """
         self.ensure_plan()
         plan = self.scheduler.update(task_rates=task_rates,
                                      graph=self._graph)

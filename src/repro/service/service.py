@@ -1,0 +1,639 @@
+"""Scheduler-as-a-service: the asyncio serving front-end.
+
+:class:`SchedulerService` wraps long-lived :class:`repro.core.Scheduler`
+sessions behind an async request API for many logical clients (tenants):
+
+  * **Request coalescing** — every request lands in its tenant's pending
+    queue; a flush armed ``window`` seconds out drains the queue and
+    folds adjacent same-kind runs (:mod:`repro.service.coalescing`): a
+    burst of registrations becomes ONE ``submit_many`` fleet replan, a
+    burst of drift updates becomes ONE batched suffix-replay
+    ``Scheduler.update``.  Each request still gets its own response,
+    resolved from the coalesced result.
+  * **Sharding** — tenants are assigned to worker lanes by consistent
+    hashing (:mod:`repro.service.sharding`); each lane serializes its
+    own tenants (one ``asyncio.Lock``) and owns their Scheduler
+    sessions, so independent tenants never contend on one session or
+    share plan/trace caches.
+  * **Graceful retiming** — drift and fault requests route through the
+    exact suffix-invalidation paths of the session API;
+    :class:`~repro.core.InfeasibleScheduleError` and backend demotions
+    surface as structured per-request responses, never as a dead
+    service.
+
+Everything observable is deterministic: shard placement is seeded
+hashing, coalescing never reorders requests, and the schedules returned
+are bit-identical to a direct single-session :class:`Scheduler` replaying
+the same request sequence (the chaos tests' oracle).  The only
+wall-clock reads are latency *accounting* (behind an analysis pragma) —
+never a scheduling input.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import (HVLB_CC_B, FleetPlan, InfeasibleScheduleError, Plan,
+                        Policy, ReplayStats, Scheduler, Topology)
+from repro.core.faults import (Fault, FaultSpec, LinkDegraded, LinkDown,
+                               ProcessorDown)
+from repro.core.graph import SPG
+
+from .coalescing import Batch, coalesce
+from .protocol import OPS, Response
+from .sharding import HashRing, shard_key
+
+__all__ = ["SchedulerService", "ServiceClient", "ServiceError",
+           "ServiceStats"]
+
+
+class ServiceError(Exception):
+    """A structured per-request failure (``code`` is the protocol error
+    code: ``bad-request`` / ``no-graphs`` / ``infeasible`` / ...)."""
+
+    def __init__(self, code: str, message: str) -> None:
+        super().__init__(message)
+        self.code = code
+
+
+def _spec_as_faults(spec: FaultSpec) -> Tuple[Fault, ...]:
+    """The active fault spec as constructor-ready ``Fault`` records (the
+    same round-trip the chaos tests use to seed a fresh Scheduler)."""
+    faults: List[Fault] = [ProcessorDown(p) for p in spec.down_procs]
+    for link, f in spec.link_factors:
+        faults.append(LinkDown(link) if math.isinf(f)
+                      else LinkDegraded(link, f))
+    return tuple(faults)
+
+
+def _slice_union(union: SPG, names_sizes: Sequence[Tuple[str, int]],
+                 offsets: Sequence[int]) -> List[SPG]:
+    """Split a (possibly drifted) disjoint-union SPG back into per-graph
+    SPGs.  Edge/tpl insertion order and every float are preserved, so
+    re-unioning the slices reproduces ``union`` bit-identically — this
+    is how drift applied to the fleet union survives the next
+    registration burst's fresh ``submit_many``.
+    """
+    out: List[SPG] = []
+    for (name, n), off in zip(names_sizes, offsets):
+        hi = off + n
+        out.append(SPG(
+            n=n,
+            edges=[(i - off, j - off)
+                   for (i, j) in union.edges if off <= i < hi],
+            weights=union.weights[off:hi].copy(),
+            tpl={(i - off, j - off): v
+                 for (i, j), v in union.tpl.items() if off <= i < hi},
+            tpl_proportional_ccr=union.tpl_proportional_ccr,
+            comp_matrix=None if union.comp_matrix is None
+            else union.comp_matrix[off:hi].copy(),
+            name=name))
+    return out
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Service-level accounting (the exp10 measurements)."""
+
+    requests: int = 0
+    batches: int = 0
+    replans: int = 0              # actual Scheduler invocations
+    coalesced_events: int = 0     # requests folded into those replans
+    plan_cache_hits: int = 0      # plan ops answered without scheduling
+    errors: int = 0
+    evictions: int = 0            # LRU tenant-session evictions
+    replan_latencies_s: List[float] = dataclasses.field(
+        default_factory=list)
+
+    def mean_replan_latency_s(self) -> float:
+        lat = self.replan_latencies_s
+        return sum(lat) / len(lat) if lat else 0.0
+
+    def p99_replan_latency_s(self) -> float:
+        lat = sorted(self.replan_latencies_s)
+        if not lat:
+            return 0.0
+        return lat[min(len(lat) - 1, max(0, math.ceil(0.99 * len(lat)) - 1))]
+
+    def view(self) -> Dict[str, Any]:
+        return {
+            "requests": self.requests, "batches": self.batches,
+            "replans": self.replans,
+            "coalesced_events": self.coalesced_events,
+            "plan_cache_hits": self.plan_cache_hits,
+            "errors": self.errors, "evictions": self.evictions,
+            "mean_replan_latency_s": self.mean_replan_latency_s(),
+            "p99_replan_latency_s": self.p99_replan_latency_s(),
+        }
+
+
+@dataclasses.dataclass
+class _Item:
+    """One pending request: kind + params + the future its response
+    resolves."""
+
+    kind: str
+    params: Dict[str, Any]
+    future: "asyncio.Future[Response]"
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Per-tenant serving state, owned by exactly one worker lane."""
+
+    name: str
+    lane: int
+    topology: Topology                       # drifts with link_speed updates
+    graphs: Dict[str, SPG] = dataclasses.field(default_factory=dict)
+    sched: Optional[Scheduler] = None
+    fleet: Optional[FleetPlan] = None
+    period: Optional[float] = None           # pinned fleet period (LRU rebuild)
+    fault_records: Tuple[Fault, ...] = ()
+    pending: List[_Item] = dataclasses.field(default_factory=list)
+    flush_armed: bool = False
+    last_used: int = 0                       # service-wide LRU tick
+
+
+_FAULT_OPS = ("mark_failed", "degrade", "restore")
+
+
+class SchedulerService:
+    """Async scheduling service over a pool of sharded worker lanes.
+
+    ``window`` is the coalescing debounce in seconds (``0`` = flush on
+    the next event-loop tick — a synchronously-enqueued burst still
+    coalesces); ``coalesce=False`` keeps the async machinery but
+    processes every request as its own singleton batch (the exp10
+    baseline).  ``max_tenants_per_worker`` bounds live Scheduler
+    sessions per lane with LRU eviction; an evicted tenant keeps its
+    graphs/faults/pinned period and is transparently rebuilt on its
+    next request.
+    """
+
+    def __init__(self, topology: Topology,
+                 policy: Optional[Policy] = None, *,
+                 workers: int = 4, window: float = 0.0,
+                 coalesce: bool = True,
+                 backend: Optional[str] = None,
+                 batch: Optional[int] = None,
+                 max_tenants_per_worker: Optional[int] = None) -> None:
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if window < 0:
+            raise ValueError(f"window must be >= 0 seconds, got {window}")
+        if max_tenants_per_worker is not None and max_tenants_per_worker < 1:
+            raise ValueError("max_tenants_per_worker must be >= 1")
+        self.topology = topology
+        self.policy = policy
+        self.backend = backend
+        self.batch = batch
+        self.window = window
+        self.coalesce = coalesce
+        self.max_tenants_per_worker = max_tenants_per_worker
+        self.stats = ServiceStats()
+        self._topo_tag = (f"{topology.n_procs}p-"
+                          f"{len(topology.all_links())}l")
+        shards = [f"w{i}" for i in range(workers)]
+        self._ring = HashRing(shards)
+        self._lane_of = {name: i for i, name in enumerate(shards)}
+        self._locks = [asyncio.Lock() for _ in range(workers)]
+        self._tenants: Dict[str, _Tenant] = {}
+        self._lru_tick = 0
+
+    # ------------------------------------------------------------ client
+    def client(self, tenant: str) -> "ServiceClient":
+        """An in-process client bound to one tenant."""
+        return ServiceClient(self, tenant)
+
+    def tenant_lane(self, tenant: str) -> int:
+        """The worker lane that owns ``tenant`` (pure function of the
+        shard key — see :func:`repro.service.sharding.shard_key`)."""
+        return self._lane_of[self._ring.lookup(
+            shard_key(tenant, self._topo_tag))]
+
+    async def request(self, tenant: str, op: str,
+                      rid: int = 0, **params: Any) -> Response:
+        """Enqueue one request and await its (possibly coalesced)
+        response.  Never raises for scheduling failures — those come
+        back as ``ok=False`` responses with a structured error."""
+        if op == "stats":
+            return Response.success(rid, self.stats.view())
+        if op not in OPS:
+            return Response.failure(rid, "bad-request",
+                                    f"unknown op {op!r}")
+        self.stats.requests += 1
+        t = self._tenant(tenant)
+        fut: "asyncio.Future[Response]" = \
+            asyncio.get_running_loop().create_future()
+        t.pending.append(_Item(op, params, fut, rid))
+        if not t.flush_armed:
+            t.flush_armed = True
+            asyncio.get_running_loop().create_task(self._flush_later(t))
+        return await fut
+
+    # ----------------------------------------------------------- routing
+    def _tenant(self, name: str) -> _Tenant:
+        t = self._tenants.get(name)
+        if t is None:
+            t = _Tenant(name=name, lane=self.tenant_lane(name),
+                        topology=self.topology)
+            self._tenants[name] = t
+        return t
+
+    async def _flush_later(self, t: _Tenant) -> None:
+        await asyncio.sleep(self.window)
+        async with self._locks[t.lane]:
+            items, t.pending = t.pending, []
+            t.flush_armed = False
+            if not items:
+                return
+            if self.coalesce:
+                batches = coalesce(items, lambda it: it.kind)
+            else:
+                batches = [Batch(it.kind, [it]) for it in items]
+            self._touch(t)
+            for b in batches:
+                self._run_batch(t, b)
+
+    def _touch(self, t: _Tenant) -> None:
+        self._lru_tick += 1
+        t.last_used = self._lru_tick
+
+    # --------------------------------------------------------- execution
+    def _run_batch(self, t: _Tenant, batch: Batch) -> None:
+        self.stats.batches += 1
+        try:
+            if batch.kind == "register":
+                self._do_register(t, batch)
+            elif batch.kind == "update":
+                self._do_update(t, batch)
+            elif batch.kind == "plan":
+                self._do_plan(t, batch)
+            elif batch.kind in _FAULT_OPS:
+                self._do_fault(t, batch)
+            else:
+                raise ServiceError("bad-request",
+                                   f"unhandled op {batch.kind!r}")
+        except ServiceError as e:
+            self._fail(batch, e.code, str(e))
+        except InfeasibleScheduleError as e:
+            # no valid plan until a restore (or feasible replan): drop
+            # the stale fleet so later ops rebuild instead of serving it
+            t.fleet = None
+            self._fail(batch, "infeasible", str(e))
+        except (KeyError, TypeError, ValueError) as e:
+            self._fail(batch, "bad-request", str(e))
+
+    def _fail(self, batch: Batch, code: str, message: str) -> None:
+        for it in batch.items:
+            if not it.future.done():
+                self.stats.errors += 1
+                it.future.set_result(
+                    Response.failure(it.rid, code, message))
+
+    def _resolve(self, it: _Item, result: Dict[str, Any]) -> None:
+        if not it.future.done():
+            it.future.set_result(Response.success(it.rid, result))
+
+    # -- register ------------------------------------------------------
+    def _do_register(self, t: _Tenant, batch: Batch) -> None:
+        added: List[Tuple[_Item, str]] = []
+        try:
+            for it in batch.items:
+                g = it.params.get("graph")
+                if not isinstance(g, SPG):
+                    raise ServiceError("bad-request",
+                                       "register needs graph=<SPG>")
+                name = it.params.get("name") or g.name
+                if name in t.graphs:
+                    raise ServiceError(
+                        "bad-request",
+                        f"graph {name!r} already registered for tenant "
+                        f"{t.name!r}")
+                t.graphs[name] = g
+                added.append((it, name))
+            self._replan_fleet(t, coalesced=len(batch))
+        except BaseException:
+            for _, name in added:
+                t.graphs.pop(name, None)
+            raise
+        for it, name in added:
+            self._resolve(it, self._graph_view(t, name))
+
+    def _replan_fleet(self, t: _Tenant, coalesced: int,
+                      pin_period: bool = False) -> None:
+        """One fresh ``submit_many`` over the tenant's whole graph set
+        (register bursts and post-eviction rebuilds).
+
+        ``pin_period=True`` (rebuilds over an *unchanged* graph set)
+        carries the tenant's pinned fleet period into the fresh session
+        so an LRU eviction stays invisible to the schedules served; a
+        registration burst changes the union, so it re-derives the
+        period exactly like a direct fresh ``submit_many`` would.
+        """
+        policy = self.policy if self.policy is not None else HVLB_CC_B()
+        if pin_period and t.period is not None \
+                and hasattr(policy, "period") and policy.period is None:
+            policy = dataclasses.replace(policy, period=t.period)
+        sched = Scheduler(t.topology, policy=policy,
+                          backend=self.backend, batch=self.batch,
+                          faults=t.fault_records)
+        t0 = self._now()
+        fleet = sched.submit_many(list(t.graphs.values()))
+        self._record_replan(t0, coalesced)
+        t.sched, t.fleet = sched, fleet
+        t.period = fleet.period
+        self._evict_lru(t.lane)
+
+    def _require_session(self, t: _Tenant) -> Scheduler:
+        if not t.graphs:
+            raise ServiceError(
+                "no-graphs",
+                f"tenant {t.name!r} has no registered graphs")
+        if t.sched is None or t.fleet is None:
+            # post-eviction rebuild over the unchanged graph set
+            self._replan_fleet(t, coalesced=0, pin_period=True)
+        assert t.sched is not None
+        return t.sched
+
+    # -- update --------------------------------------------------------
+    def _do_update(self, t: _Tenant, batch: Batch) -> None:
+        sched = self._require_session(t)
+        assert t.fleet is not None
+        names = list(t.graphs)
+        offsets = dict(zip(names, t.fleet.offsets))
+        tr_events: List[Dict[int, float]] = []
+        ls_events: List[Dict[str, float]] = []
+        for it in batch.items:
+            tr = it.params.get("task_rates")
+            if tr:
+                gname = it.params.get("graph")
+                if gname is None:
+                    if len(names) != 1:
+                        raise ServiceError(
+                            "bad-request",
+                            "task_rates needs graph=<name> when several "
+                            "graphs are registered")
+                    gname = names[0]
+                if gname not in offsets:
+                    raise ServiceError(
+                        "bad-request",
+                        f"unknown graph {gname!r} for tenant {t.name!r}")
+                off, g = offsets[gname], t.graphs[gname]
+                ev: Dict[int, float] = {}
+                for task, f in tr.items():
+                    task = int(task)
+                    if not 0 <= task < g.n:
+                        raise ServiceError(
+                            "bad-request",
+                            f"task {task} out of range for graph "
+                            f"{gname!r} (n={g.n})")
+                    ev[off + task] = float(f)
+                tr_events.append(ev)
+            ls = it.params.get("link_speed")
+            if ls:
+                ls_events.append({str(k): float(v) for k, v in ls.items()})
+        t0 = self._now()
+        plan = sched.update(task_rates=tr_events or None,
+                            link_speed=ls_events or None)
+        self._record_replan(t0, coalesced=len(batch))
+        self._adopt_union_plan(t, plan)
+        replay = _replay_view(plan.replay)
+        for it in batch.items:
+            gname = it.params.get("graph")
+            if gname is not None:
+                self._resolve(it, self._graph_view(t, gname,
+                                                   replay=replay))
+            else:
+                self._resolve(it, self._fleet_view(t, replay=replay))
+
+    def _adopt_union_plan(self, t: _Tenant, plan: Plan) -> None:
+        """Fold a union-graph ``Plan`` back into the tenant's fleet
+        state: per-graph SPGs are re-sliced from the (possibly drifted)
+        union so the next registration burst re-unions bit-identically.
+        """
+        assert t.fleet is not None and t.sched is not None
+        names_sizes = [(name, g.n) for name, g in t.graphs.items()]
+        sliced = _slice_union(plan.graph, names_sizes, t.fleet.offsets)
+        t.graphs = {name: g for (name, _), g in zip(names_sizes, sliced)}
+        t.topology = t.sched.topology
+        t.period = plan.period
+        t.fleet = FleetPlan(schedule=plan.schedule, graphs=sliced,
+                            offsets=list(t.fleet.offsets),
+                            policy=plan.policy, period=plan.period,
+                            sweep=plan.sweep, backend=plan.backend,
+                            batch=plan.batch, fallback=plan.fallback)
+
+    # -- faults --------------------------------------------------------
+    def _do_fault(self, t: _Tenant, batch: Batch) -> None:
+        it = batch.items[0]        # fault ops are singleton barriers
+        p = it.params
+        if t.sched is None:
+            # no live session (pre-registration, or evicted): record the
+            # fault on a graphless session — deliberately NOT a fleet
+            # rebuild first, so a restore can lift an infeasible fault
+            # without having to replan under it
+            t.sched = Scheduler(t.topology, policy=self.policy,
+                                backend=self.backend, batch=self.batch,
+                                faults=t.fault_records)
+        sched = t.sched
+        t0 = self._now()
+        try:
+            if batch.kind == "mark_failed":
+                plan = sched.mark_failed(proc=p.get("proc"),
+                                         link=p.get("link"))
+            elif batch.kind == "degrade":
+                if p.get("task") is not None:
+                    plan = sched.degrade(
+                        task=self._union_task(t, p.get("graph"),
+                                              int(p["task"])),
+                        factor=float(p["factor"]))
+                else:
+                    plan = sched.degrade(link=p.get("link"),
+                                         factor=float(p["factor"]))
+            else:                  # restore
+                plan = sched.restore(proc=p.get("proc"),
+                                     link=p.get("link"))
+        finally:
+            # the fault stays recorded even on an infeasible replan;
+            # fresh sessions (register bursts, rebuilds) must carry it
+            t.fault_records = _spec_as_faults(sched.faults)
+        if plan is None:
+            if t.graphs:
+                # the session lost its fleet (an earlier infeasible
+                # replan dropped it): replan from scratch under the new
+                # fault state
+                self._replan_fleet(t, coalesced=len(batch),
+                                   pin_period=True)
+                self._resolve(it, self._fleet_view(t))
+            else:                  # recorded for later registrations
+                self._resolve(it, {"tenant": t.name, "deferred": True,
+                                   "faults": _fault_view(sched.faults)})
+            return
+        self._record_replan(t0, coalesced=len(batch))
+        self._adopt_union_plan(t, plan)
+        self._resolve(it, self._fleet_view(
+            t, replay=_replay_view(plan.replay)))
+
+    def _union_task(self, t: _Tenant, gname: Optional[str],
+                    task: int) -> int:
+        assert t.fleet is not None
+        names = list(t.graphs)
+        if gname is None:
+            if len(names) != 1:
+                raise ServiceError(
+                    "bad-request",
+                    "task degrade needs graph=<name> when several "
+                    "graphs are registered")
+            gname = names[0]
+        if gname not in t.graphs:
+            raise ServiceError("bad-request",
+                               f"unknown graph {gname!r} for tenant "
+                               f"{t.name!r}")
+        g = t.graphs[gname]
+        if not 0 <= task < g.n:
+            raise ServiceError(
+                "bad-request",
+                f"task {task} out of range for graph {gname!r} "
+                f"(n={g.n})")
+        return t.fleet.offsets[names.index(gname)] + task
+
+    # -- plan ----------------------------------------------------------
+    def _do_plan(self, t: _Tenant, batch: Batch) -> None:
+        self._require_session(t)
+        for it in batch.items:
+            self.stats.plan_cache_hits += 1
+            gname = it.params.get("graph")
+            if gname is not None:
+                if gname not in t.graphs:
+                    raise ServiceError(
+                        "bad-request",
+                        f"unknown graph {gname!r} for tenant {t.name!r}")
+                self._resolve(it, self._graph_view(t, gname))
+            else:
+                self._resolve(it, self._fleet_view(t))
+
+    # -- LRU -----------------------------------------------------------
+    def _evict_lru(self, lane: int) -> None:
+        cap = self.max_tenants_per_worker
+        if cap is None:
+            return
+        live = [t for t in self._tenants.values()
+                if t.lane == lane and t.sched is not None]
+        for t in sorted(live, key=lambda t: t.last_used)[:-cap]:
+            # drop the session (plans, traces, compiled instances); the
+            # tenant keeps graphs + faults + pinned period and is
+            # rebuilt bit-identically on its next request
+            t.sched, t.fleet = None, None
+            self.stats.evictions += 1
+
+    # -- views ---------------------------------------------------------
+    def _fleet_view(self, t: _Tenant,
+                    replay: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
+        f = t.fleet
+        assert f is not None
+        return {
+            "tenant": t.name,
+            "graphs": list(t.graphs),
+            "makespan": float(f.makespan),
+            "period": None if f.period is None else float(f.period),
+            "alpha": (None if f.schedule.alpha is None
+                      else float(f.schedule.alpha)),
+            "backend": f.backend,
+            "batch": f.batch,
+            "fallback": (None if not f.fallback
+                         else [list(x) for x in f.fallback]),
+            "faults": _fault_view(t.sched.faults) if t.sched else None,
+            "replay": replay,
+        }
+
+    def _graph_view(self, t: _Tenant, name: str,
+                    replay: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
+        assert t.fleet is not None
+        sub = t.fleet.subschedule(list(t.graphs).index(name))
+        view = self._fleet_view(t, replay=replay)
+        view.update({
+            "graph": name,
+            "graph_makespan": float(sub.makespan),
+            "proc": [int(x) for x in sub.proc],
+            "start": [float(x) for x in sub.start],
+            "finish": [float(x) for x in sub.finish],
+        })
+        return view
+
+    # -- accounting ----------------------------------------------------
+    def _now(self) -> float:
+        # analysis: allow[nondeterminism] latency accounting only, never a scheduling input
+        return asyncio.get_running_loop().time()
+
+    def _record_replan(self, t0: float, coalesced: int) -> None:
+        self.stats.replans += 1
+        self.stats.coalesced_events += coalesced
+        self.stats.replan_latencies_s.append(self._now() - t0)
+
+
+def _replay_view(replay: Optional[ReplayStats]
+                 ) -> Optional[Dict[str, Any]]:
+    if replay is None:
+        return None
+    return {"suffix_start": replay.suffix_start,
+            "decisions_replayed": replay.decisions_replayed,
+            "decisions_simulated": replay.decisions_simulated,
+            "invalidated_by_fault": replay.invalidated_by_fault,
+            "coalesced": replay.coalesced}
+
+
+def _fault_view(spec: FaultSpec) -> Dict[str, Any]:
+    return {"down_procs": list(spec.down_procs),
+            "link_factors": {link: ("down" if math.isinf(f) else f)
+                             for link, f in spec.link_factors}}
+
+
+class ServiceClient:
+    """In-process client bound to one tenant (tests/benchmarks; the TCP
+    front-end in :mod:`repro.service.__main__` speaks the same ops over
+    :mod:`repro.service.protocol`)."""
+
+    def __init__(self, service: SchedulerService, tenant: str) -> None:
+        self.service = service
+        self.tenant = tenant
+
+    async def register(self, graph: SPG,
+                       name: Optional[str] = None) -> Response:
+        return await self.service.request(
+            self.tenant, "register", graph=graph, name=name)
+
+    async def update(self, *,
+                     task_rates: Optional[Dict[int, float]] = None,
+                     link_speed: Optional[Dict[str, float]] = None,
+                     graph: Optional[str] = None) -> Response:
+        return await self.service.request(
+            self.tenant, "update", task_rates=task_rates,
+            link_speed=link_speed, graph=graph)
+
+    async def mark_failed(self, *, proc: Optional[int] = None,
+                          link: Optional[str] = None) -> Response:
+        return await self.service.request(
+            self.tenant, "mark_failed", proc=proc, link=link)
+
+    async def degrade(self, *, link: Optional[str] = None,
+                      graph: Optional[str] = None,
+                      task: Optional[int] = None,
+                      factor: float) -> Response:
+        return await self.service.request(
+            self.tenant, "degrade", link=link, graph=graph, task=task,
+            factor=factor)
+
+    async def restore(self, *, proc: Optional[int] = None,
+                      link: Optional[str] = None) -> Response:
+        return await self.service.request(
+            self.tenant, "restore", proc=proc, link=link)
+
+    async def plan(self, graph: Optional[str] = None) -> Response:
+        return await self.service.request(self.tenant, "plan",
+                                          graph=graph)

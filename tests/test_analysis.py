@@ -126,6 +126,22 @@ class TestNondeterminism:
                 return rng.random(n), time.monotonic() - t0
             """, "nondeterminism")
 
+    def test_violation_event_loop_clock(self, tmp_path):
+        assert_finds(tmp_path, """
+            import asyncio
+            def now():
+                loop = asyncio.get_running_loop()
+                return loop.time()
+            """, "nondeterminism")
+
+    def test_event_loop_clock_allowed_behind_pragma(self, tmp_path):
+        assert_clean(tmp_path, """
+            import asyncio
+            def now():
+                # analysis: allow[nondeterminism] latency accounting only
+                return asyncio.get_running_loop().time()
+            """, "nondeterminism")
+
 
 class TestSetIteration:
     def test_violation(self, tmp_path):

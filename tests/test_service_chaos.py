@@ -1,0 +1,152 @@
+"""Service chaos harness (ISSUE 8 satellite): seeded random request
+scripts — registration bursts, drift updates, resource faults and
+restores, interleaved across tenants — driven through
+:class:`repro.service.SchedulerService`.
+
+Invariants asserted:
+
+  * every response is either ``ok`` or a *structured* error with a
+    known protocol code — the service never wedges or raises;
+  * after every burst, each tenant's live fleet schedule passes the
+    independent :func:`repro.core.schedule_violations` oracle under the
+    active fault spec;
+  * the final state matches a direct fresh single-session
+    ``Scheduler.submit_many`` bit-identically (same drifted graphs,
+    same recorded faults, same pinned period) — and when the service
+    ends infeasible, the fresh session must raise
+    :class:`InfeasibleScheduleError` too.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (HVLB_CC_B, InfeasibleScheduleError, Scheduler,
+                        fully_switched_topology, random_spg,
+                        schedule_violations)
+from repro.service import SchedulerService
+
+_P = 4
+_POLICY = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+_KNOWN_CODES = {"infeasible", "bad-request", "no-graphs"}
+
+
+def _topology():
+    return fully_switched_topology(
+        _P, rates=[1.0, 1.2, 0.9, 1.1],
+        link_speeds=[1.0, 2.0, 1.5, 1.2])
+
+
+def _script(rng, tg, tenant, n_ops):
+    """A seeded request script: list of bursts, burst = list of
+    (kind, params)."""
+    links = tg.all_links()
+    ops = []
+    n_graphs = 0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.30 or n_graphs == 0:
+            n = int(rng.integers(8, 12))
+            g = random_spg(n, rng, tg=tg, outdeg_constraint=True)
+            g.name = f"{tenant}-g{n_graphs}"
+            ops.append(("register", {"graph": g, "name": g.name}))
+            n_graphs += 1
+        elif r < 0.60:
+            gname = f"{tenant}-g{int(rng.integers(n_graphs))}"
+            ops.append(("update", {
+                "graph": gname,
+                "task_rates": {int(rng.integers(8)):
+                               float(rng.uniform(0.7, 1.6))}}))
+        elif r < 0.68:
+            ops.append(("update", {
+                "link_speed": {links[int(rng.integers(len(links)))]:
+                               float(rng.uniform(0.8, 1.5))}}))
+        elif r < 0.76:
+            ops.append(("mark_failed",
+                        {"proc": int(rng.integers(_P))}
+                        if rng.random() < 0.5 else
+                        {"link": links[int(rng.integers(len(links)))]}))
+        elif r < 0.84:
+            ops.append(("degrade",
+                        {"link": links[int(rng.integers(len(links)))],
+                         "factor": float(rng.uniform(1.2, 3.0))}))
+        elif r < 0.92:
+            ops.append(("restore",
+                        {"proc": int(rng.integers(_P))}
+                        if rng.random() < 0.5 else
+                        {"link": links[int(rng.integers(len(links)))]}))
+        else:
+            ops.append(("plan", {}))
+    # group into bursts of 1-4 adjacent ops
+    bursts, i = [], 0
+    while i < len(ops):
+        k = int(rng.integers(1, 5))
+        bursts.append(ops[i:i + k])
+        i += k
+    return bursts
+
+
+def _check_live_fleets(svc):
+    """The per-burst oracle: every live fleet schedule validates clean
+    under the tenant's active fault spec."""
+    for t in svc._tenants.values():
+        if t.fleet is not None and t.sched is not None:
+            v = schedule_violations(t.fleet.schedule, t.sched.faults)
+            assert v == [], v
+
+
+async def _drive(svc, scripts):
+    for burst_idx in range(max(len(b) for b in scripts.values())):
+        futs = []
+        for tenant, bursts in scripts.items():
+            if burst_idx >= len(bursts):
+                continue
+            for kind, params in bursts[burst_idx]:
+                futs.append(asyncio.ensure_future(
+                    svc.request(tenant, kind, **params)))
+        for resp in await asyncio.gather(*futs):
+            assert resp.ok or resp.error["code"] in _KNOWN_CODES, resp
+        _check_live_fleets(svc)
+    return {tenant: await svc.request(tenant, "plan")
+            for tenant in scripts}
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_chaos_script_matches_fresh_scheduler(seed):
+    tg = _topology()
+    rng = np.random.default_rng(7_000 + seed)
+    scripts = {tenant: _script(rng, tg, tenant, n_ops=12)
+               for tenant in ("carA", "carB")}
+
+    svc = SchedulerService(tg, _POLICY, workers=3)
+    finals = asyncio.run(_drive(svc, scripts))
+
+    for tenant, resp in finals.items():
+        t = svc._tenants[tenant]
+        fresh = Scheduler(
+            t.topology,
+            policy=dataclasses.replace(
+                _POLICY,
+                period=resp.result["period"] if resp.ok else None),
+            faults=t.fault_records)
+        if not resp.ok:
+            assert resp.error["code"] == "infeasible", resp
+            with pytest.raises(InfeasibleScheduleError):
+                fresh.submit_many(list(t.graphs.values()))
+            continue
+        fleet = fresh.submit_many(list(t.graphs.values()))
+        assert float(fleet.makespan) == resp.result["makespan"]
+        for k, name in enumerate(t.graphs):
+            sub = fleet.subschedule(k)
+            view = asyncio.run(_plan_view(svc, tenant, name))
+            assert view["proc"] == [int(x) for x in sub.proc]
+            assert view["start"] == [float(x) for x in sub.start]
+            assert view["finish"] == [float(x) for x in sub.finish]
+        assert schedule_violations(fleet.schedule, fresh.faults) == []
+
+
+async def _plan_view(svc, tenant, name):
+    resp = await svc.request(tenant, "plan", graph=name)
+    assert resp.ok, resp.error
+    return resp.result

@@ -201,6 +201,74 @@ def test_submit_many_rejects_mixed_tpl_conventions():
         Scheduler(tg).submit_many([])
 
 
+# ----------------------------------------------------- batched update
+def test_batched_update_matches_sequential_updates():
+    """One update() with k event dicts == k sequential update() calls,
+    bit-exactly — the coalescing primitive of the serving layer."""
+    g, tg = _case(61)
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+    tr_events = [{3: 1.5}, {7: 0.8, 3: 1.1}, {12: 1.3}]
+    ls_events = [{"l1": 0.5}, {"l1": 0.75, "l3": 1.2}]
+
+    seq = Scheduler(tg, policy=policy)
+    seq.submit(g)
+    for ev in tr_events:
+        seq.update(task_rates=ev)
+    for ev in ls_events:
+        last_seq = seq.update(link_speed=ev)
+
+    bat = Scheduler(tg, policy=policy)
+    bat.submit(g)
+    folded = bat.update(task_rates=tr_events, link_speed=ls_events)
+
+    assert_same_schedule(folded.schedule, last_seq.schedule)
+    np.testing.assert_array_equal(folded.graph.weights,
+                                  last_seq.graph.weights)
+    assert bat.topology.link_speed == seq.topology.link_speed
+    assert folded.replay.coalesced == 5       # 3 task + 2 link events
+    assert last_seq.replay.coalesced == 1     # plain updates don't fold
+
+
+def test_batched_update_factors_compose_sequentially():
+    """(w * f1) * f2, never w * (f1 * f2): the float fold order must be
+    the sequential one or batched != sequential on real hardware."""
+    g, tg = _case(71)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    sched.submit(g)
+    plan = sched.update(task_rates=[{5: 1.1}, {5: 1.2}, {5: 0.7}])
+    assert plan.graph.weights[5] == ((g.weights[5] * 1.1) * 1.2) * 0.7
+
+
+def test_batched_update_noop_events_do_not_count():
+    g, tg = _case(81)
+    sched = Scheduler(tg, policy=HVLB_CC_B(alpha_max=1.0, alpha_step=0.5))
+    plan = sched.submit(g)
+    # all-noop batch: cached plan comes back untouched
+    again = sched.update(task_rates=[{3: 1.0}, {}])
+    assert again is plan
+    # noop events inside a real batch don't inflate the fold count
+    upd = sched.update(task_rates=[{3: 1.0}, {4: 1.5}])
+    assert upd.replay.coalesced == 1
+
+
+def test_batched_update_fleet_suffix_replay():
+    """Batched drift on a submit_many union replays one combined
+    suffix and matches the fresh fleet submit."""
+    rng = np.random.default_rng(91)
+    tg = paper_topology()
+    gs = [random_spg(12, rng, ccr=1.0, tg=tg, outdeg_constraint=True)
+          for _ in range(3)]
+    policy = HVLB_CC_B(alpha_max=1.0, alpha_step=0.25)
+    sched = Scheduler(tg, policy=policy)
+    fleet = sched.submit_many(gs)
+    off1 = gs[0].n                            # graph 1's union offset
+    upd = sched.update(task_rates=[{off1 + 2: 1.4}, {off1 + 5: 0.8}])
+    assert upd.replay.coalesced == 2
+    fresh = Scheduler(tg).submit(
+        upd.graph, dataclasses.replace(policy, period=fleet.period))
+    assert_same_schedule(upd.schedule, fresh.schedule)
+
+
 # ----------------------------------------------------- policies/results
 def test_sweepresult_array_accessors():
     g, tg = paper_spg(), paper_topology()
