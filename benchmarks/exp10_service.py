@@ -105,6 +105,7 @@ def run(full: bool = False, engine: str = "compiled",
         svc = SchedulerService(tg, policy, workers=4,
                                coalesce=coalesce, backend=backend)
         finals = asyncio.run(_drive(svc, tenants))
+        svc.close()
         return svc, finals
 
     (svc_on, fin_on), us_on = timed(_run, True)

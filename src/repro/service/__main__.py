@@ -52,16 +52,24 @@ async def _handle(service: SchedulerService,
     tasks = set()
 
     async def dispatch(line: bytes) -> None:
+        rid = 0
         try:
             req = decode_request(line)
+            rid = req.id
             params = dict(req.params)
             if req.op == "register" and isinstance(params.get("graph"),
                                                    dict):
                 params["graph"] = spg_from_json(params["graph"])
-            resp = await service.request(req.tenant, req.op, rid=req.id,
+            resp = await service.request(req.tenant, req.op, rid=rid,
                                          **params)
         except ProtocolError as e:
-            resp = Response.failure(0, "bad-request", str(e))
+            resp = Response.failure(rid, "bad-request", str(e))
+        except Exception as e:
+            # e.g. a JSON key colliding with request()'s parameters:
+            # every request line gets exactly one response, or a
+            # pipelined client hangs on the missing id
+            resp = Response.failure(rid, "internal",
+                                    f"{type(e).__name__}: {e}")
         async with wlock:
             writer.write(encode_response(resp))
             await writer.drain()
@@ -97,13 +105,16 @@ async def serve(service: SchedulerService, host: str,
 
 async def _amain(args: argparse.Namespace) -> None:
     service = build_service(args)
-    server = await serve(service, args.host, args.port)
-    addr = server.sockets[0].getsockname()
-    print(f"repro.service listening on {addr[0]}:{addr[1]} "
-          f"(workers={args.workers}, window={args.window}s, "
-          f"coalesce={not args.no_coalesce})", flush=True)
-    async with server:
-        await server.serve_forever()
+    try:
+        server = await serve(service, args.host, args.port)
+        addr = server.sockets[0].getsockname()
+        print(f"repro.service listening on {addr[0]}:{addr[1]} "
+              f"(workers={args.workers}, window={args.window}s, "
+              f"coalesce={not args.no_coalesce})", flush=True)
+        async with server:
+            await server.serve_forever()
+    finally:
+        service.close()
 
 
 def main(argv: Optional[list] = None) -> None:

@@ -24,15 +24,28 @@ sessions behind an async request API for many logical clients (tenants):
 Everything observable is deterministic: shard placement is seeded
 hashing, coalescing never reorders requests, and the schedules returned
 are bit-identical to a direct single-session :class:`Scheduler` replaying
-the same request sequence (the chaos tests' oracle).  The only
-wall-clock reads are latency *accounting* (behind an analysis pragma) —
-never a scheduling input.
+the same request sequence (the chaos tests' oracle).  An *invalid*
+request never poisons the burst it rode in on: items are validated
+before any mutation and fail individually, and a coalesced replan that
+fails outright falls back to uncoalesced per-item processing — so the
+valid items of a mixed burst land exactly as they would one at a time.
+The only clock reads are monotonic latency *accounting* — never a
+scheduling input.
+
+Each lane executes its batches on its own single worker thread
+(``run_in_executor``), so one long replan never stalls other lanes or
+the TCP accept/read loop; the per-lane ``asyncio.Lock`` plus the
+one-thread executor preserve per-lane serialization, which is what the
+determinism oracle needs.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
 import math
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import (HVLB_CC_B, FleetPlan, InfeasibleScheduleError, Plan,
@@ -40,6 +53,7 @@ from repro.core import (HVLB_CC_B, FleetPlan, InfeasibleScheduleError, Plan,
 from repro.core.faults import (Fault, FaultSpec, LinkDegraded, LinkDown,
                                ProcessorDown)
 from repro.core.graph import SPG
+from repro.core.validate import check_link_speeds, check_task_rates
 
 from .coalescing import Batch, coalesce
 from .protocol import OPS, Response
@@ -200,8 +214,17 @@ class SchedulerService:
         self._ring = HashRing(shards)
         self._lane_of = {name: i for i, name in enumerate(shards)}
         self._locks = [asyncio.Lock() for _ in range(workers)]
+        self._executors: List[Optional[ThreadPoolExecutor]] = \
+            [None] * workers                 # lazily, one thread per lane
         self._tenants: Dict[str, _Tenant] = {}
         self._lru_tick = 0
+        # the event loop holds only weak task refs: anchor flush tasks
+        # here or a GC pass could drop one mid-debounce, stranding its
+        # tenant's pending futures
+        self._flush_tasks: set = set()
+        # stats are mutated from worker-lane threads and read from the
+        # loop ("stats" op); a plain += on an int attribute is not atomic
+        self._stats_lock = threading.Lock()
 
     # ------------------------------------------------------------ client
     def client(self, tenant: str) -> "ServiceClient":
@@ -220,19 +243,32 @@ class SchedulerService:
         response.  Never raises for scheduling failures — those come
         back as ``ok=False`` responses with a structured error."""
         if op == "stats":
-            return Response.success(rid, self.stats.view())
+            with self._stats_lock:
+                return Response.success(rid, self.stats.view())
         if op not in OPS:
             return Response.failure(rid, "bad-request",
                                     f"unknown op {op!r}")
-        self.stats.requests += 1
+        with self._stats_lock:
+            self.stats.requests += 1
         t = self._tenant(tenant)
         fut: "asyncio.Future[Response]" = \
             asyncio.get_running_loop().create_future()
         t.pending.append(_Item(op, params, fut, rid))
         if not t.flush_armed:
             t.flush_armed = True
-            asyncio.get_running_loop().create_task(self._flush_later(t))
+            task = asyncio.get_running_loop().create_task(
+                self._flush_later(t))
+            self._flush_tasks.add(task)
+            task.add_done_callback(self._flush_tasks.discard)
         return await fut
+
+    def close(self) -> None:
+        """Shut down the worker-lane threads (idempotent; in-flight
+        batches finish first — drain pending requests before calling)."""
+        for i, ex in enumerate(self._executors):
+            if ex is not None:
+                ex.shutdown(wait=True)
+                self._executors[i] = None
 
     # ----------------------------------------------------------- routing
     def _tenant(self, name: str) -> _Tenant:
@@ -245,6 +281,7 @@ class SchedulerService:
 
     async def _flush_later(self, t: _Tenant) -> None:
         await asyncio.sleep(self.window)
+        loop = asyncio.get_running_loop()
         async with self._locks[t.lane]:
             items, t.pending = t.pending, []
             t.flush_armed = False
@@ -255,8 +292,19 @@ class SchedulerService:
             else:
                 batches = [Batch(it.kind, [it]) for it in items]
             self._touch(t)
+            ex = self._executor(t.lane)
             for b in batches:
-                self._run_batch(t, b)
+                # scheduling runs OFF the event loop; the lane lock +
+                # one-thread executor keep per-lane serialization
+                await loop.run_in_executor(ex, self._run_batch, t, b)
+
+    def _executor(self, lane: int) -> ThreadPoolExecutor:
+        ex = self._executors[lane]
+        if ex is None:
+            ex = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix=f"repro-service-w{lane}")
+            self._executors[lane] = ex
+        return ex
 
     def _touch(self, t: _Tenant) -> None:
         self._lru_tick += 1
@@ -264,7 +312,8 @@ class SchedulerService:
 
     # --------------------------------------------------------- execution
     def _run_batch(self, t: _Tenant, batch: Batch) -> None:
-        self.stats.batches += 1
+        with self._stats_lock:
+            self.stats.batches += 1
         try:
             if batch.kind == "register":
                 self._do_register(t, batch)
@@ -286,42 +335,66 @@ class SchedulerService:
             self._fail(batch, "infeasible", str(e))
         except (KeyError, TypeError, ValueError) as e:
             self._fail(batch, "bad-request", str(e))
+        except Exception as e:
+            # last-resort: a bug must surface as a response, never as a
+            # dead flush task with clients awaiting forever
+            self._fail(batch, "internal", f"{type(e).__name__}: {e}")
 
     def _fail(self, batch: Batch, code: str, message: str) -> None:
         for it in batch.items:
-            if not it.future.done():
+            self._fail_item(it, code, message)
+
+    def _fail_item(self, it: _Item, code: str, message: str) -> None:
+        if not it.future.done():
+            with self._stats_lock:
                 self.stats.errors += 1
-                it.future.set_result(
-                    Response.failure(it.rid, code, message))
+            _set_threadsafe(it.future, Response.failure(it.rid, code,
+                                                        message))
 
     def _resolve(self, it: _Item, result: Dict[str, Any]) -> None:
         if not it.future.done():
-            it.future.set_result(Response.success(it.rid, result))
+            _set_threadsafe(it.future, Response.success(it.rid, result))
 
     # -- register ------------------------------------------------------
     def _do_register(self, t: _Tenant, batch: Batch) -> None:
-        added: List[Tuple[_Item, str]] = []
-        try:
-            for it in batch.items:
-                g = it.params.get("graph")
-                if not isinstance(g, SPG):
-                    raise ServiceError("bad-request",
-                                       "register needs graph=<SPG>")
-                name = it.params.get("name") or g.name
-                if name in t.graphs:
-                    raise ServiceError(
-                        "bad-request",
-                        f"graph {name!r} already registered for tenant "
-                        f"{t.name!r}")
-                t.graphs[name] = g
-                added.append((it, name))
-            self._replan_fleet(t, coalesced=len(batch))
-        except BaseException:
-            for _, name in added:
-                t.graphs.pop(name, None)
-            raise
-        for it, name in added:
-            self._resolve(it, self._graph_view(t, name))
+        # validate BEFORE mutating: an invalid item fails alone and the
+        # valid items still land — exactly as they would uncoalesced
+        ok: List[Tuple[_Item, str, SPG]] = []
+        bad: List[Tuple[_Item, str]] = []
+        taken = set(t.graphs)
+        for it in batch.items:
+            g = it.params.get("graph")
+            if not isinstance(g, SPG):
+                bad.append((it, "register needs graph=<SPG>"))
+                continue
+            name = it.params.get("name") or g.name
+            if name in taken:
+                bad.append((it, f"graph {name!r} already registered "
+                                f"for tenant {t.name!r}"))
+                continue
+            taken.add(name)
+            ok.append((it, name, g))
+        if ok:
+            try:
+                for _, name, g in ok:
+                    t.graphs[name] = g
+                self._replan_fleet(t, coalesced=len(ok))
+            except BaseException as e:
+                for _, name, _ in ok:
+                    t.graphs.pop(name, None)
+                if len(batch.items) > 1 and isinstance(e, Exception):
+                    # the union replan failed, but a prefix may still be
+                    # feasible: fall back to uncoalesced per-item
+                    # processing (bit-identical to coalesce=False; the
+                    # invalid items re-fail item by item)
+                    for it in batch.items:
+                        self._run_batch(t, Batch(batch.kind, [it]))
+                    return
+                raise
+            for it, name, _ in ok:
+                self._resolve(it, self._graph_view(t, name))
+        for it, msg in bad:
+            self._fail_item(it, "bad-request", msg)
 
     def _replan_fleet(self, t: _Tenant, coalesced: int,
                       pin_period: bool = False) -> None:
@@ -362,53 +435,93 @@ class SchedulerService:
     # -- update --------------------------------------------------------
     def _do_update(self, t: _Tenant, batch: Batch) -> None:
         sched = self._require_session(t)
-        assert t.fleet is not None
+        if t.fleet is None:
+            raise ServiceError("internal",
+                               "no fleet plan after session rebuild")
         names = list(t.graphs)
         offsets = dict(zip(names, t.fleet.offsets))
+        # validate BEFORE replanning: an invalid item fails alone while
+        # the valid items fold into the one suffix replay
+        ok: List[_Item] = []
+        bad: List[Tuple[_Item, ServiceError]] = []
         tr_events: List[Dict[int, float]] = []
         ls_events: List[Dict[str, float]] = []
         for it in batch.items:
-            tr = it.params.get("task_rates")
-            if tr:
+            try:
+                tr_ev, ls_ev = self._parse_update(t, it.params, names,
+                                                  offsets)
+            except ServiceError as e:
+                bad.append((it, e))
+                continue
+            ok.append(it)
+            if tr_ev:
+                tr_events.append(tr_ev)
+            if ls_ev:
+                ls_events.append(ls_ev)
+        if ok:
+            t0 = self._now()
+            try:
+                plan = sched.update(task_rates=tr_events or None,
+                                    link_speed=ls_events or None)
+            except Exception:
+                if len(batch.items) > 1:
+                    # the combined replay failed; fall back to
+                    # uncoalesced per-item processing so any feasible
+                    # prefix still lands
+                    for it in batch.items:
+                        self._run_batch(t, Batch(batch.kind, [it]))
+                    return
+                raise
+            self._record_replan(t0, coalesced=len(ok))
+            self._adopt_union_plan(t, plan)
+            replay = _replay_view(plan.replay)
+            for it in ok:
                 gname = it.params.get("graph")
-                if gname is None:
-                    if len(names) != 1:
-                        raise ServiceError(
-                            "bad-request",
-                            "task_rates needs graph=<name> when several "
-                            "graphs are registered")
-                    gname = names[0]
-                if gname not in offsets:
+                if gname is not None:
+                    self._resolve(it, self._graph_view(t, gname,
+                                                       replay=replay))
+                else:
+                    self._resolve(it, self._fleet_view(t, replay=replay))
+        for it, e in bad:
+            self._fail_item(it, e.code, str(e))
+
+    def _parse_update(self, t: _Tenant, params: Dict[str, Any],
+                      names: Sequence[str], offsets: Dict[str, int]
+                      ) -> Tuple[Dict[int, float], Dict[str, float]]:
+        """One update item's drift events in union coordinates, fully
+        validated (mirrors the session API's own checks so the batched
+        ``Scheduler.update`` cannot reject an item after the fact)."""
+        tr_ev: Dict[int, float] = {}
+        tr = params.get("task_rates")
+        if tr:
+            gname = params.get("graph")
+            if gname is None:
+                if len(names) != 1:
                     raise ServiceError(
                         "bad-request",
-                        f"unknown graph {gname!r} for tenant {t.name!r}")
-                off, g = offsets[gname], t.graphs[gname]
-                ev: Dict[int, float] = {}
-                for task, f in tr.items():
-                    task = int(task)
-                    if not 0 <= task < g.n:
-                        raise ServiceError(
-                            "bad-request",
-                            f"task {task} out of range for graph "
-                            f"{gname!r} (n={g.n})")
-                    ev[off + task] = float(f)
-                tr_events.append(ev)
-            ls = it.params.get("link_speed")
-            if ls:
-                ls_events.append({str(k): float(v) for k, v in ls.items()})
-        t0 = self._now()
-        plan = sched.update(task_rates=tr_events or None,
-                            link_speed=ls_events or None)
-        self._record_replan(t0, coalesced=len(batch))
-        self._adopt_union_plan(t, plan)
-        replay = _replay_view(plan.replay)
-        for it in batch.items:
-            gname = it.params.get("graph")
-            if gname is not None:
-                self._resolve(it, self._graph_view(t, gname,
-                                                   replay=replay))
-            else:
-                self._resolve(it, self._fleet_view(t, replay=replay))
+                        "task_rates needs graph=<name> when several "
+                        "graphs are registered")
+                gname = names[0]
+            if gname not in offsets:
+                raise ServiceError(
+                    "bad-request",
+                    f"unknown graph {gname!r} for tenant {t.name!r}")
+            off, g = offsets[gname], t.graphs[gname]
+            try:
+                local = {int(task): float(f) for task, f in tr.items()}
+                check_task_rates(local, g.n)
+            except (TypeError, ValueError) as e:
+                raise ServiceError("bad-request", str(e)) from e
+            tr_ev = {off + task: f for task, f in local.items()}
+        ls_ev: Dict[str, float] = {}
+        ls = params.get("link_speed")
+        if ls:
+            try:
+                ls_ev = {str(k): float(v) for k, v in ls.items()}
+                check_link_speeds(ls_ev, t.topology)
+            except (TypeError, ValueError) as e:
+                raise ServiceError("bad-request", str(e)) from e
+        return tr_ev, ls_ev
 
     def _adopt_union_plan(self, t: _Tenant, plan: Plan) -> None:
         """Fold a union-graph ``Plan`` back into the tenant's fleet
@@ -431,7 +544,13 @@ class SchedulerService:
     def _do_fault(self, t: _Tenant, batch: Batch) -> None:
         it = batch.items[0]        # fault ops are singleton barriers
         p = it.params
-        if t.sched is None:
+        if batch.kind == "degrade" and p.get("task") is not None:
+            # a compute spike addresses a task of the live fleet union,
+            # so it needs a session WITH a plan: "no-graphs" before any
+            # registration, transparently rebuilt after an eviction or
+            # an infeasible replan (which may re-raise as "infeasible")
+            sched = self._require_session(t)
+        elif t.sched is None:
             # no live session (pre-registration, or evicted): record the
             # fault on a graphless session — deliberately NOT a fleet
             # rebuild first, so a restore can lift an infeasible fault
@@ -439,7 +558,9 @@ class SchedulerService:
             t.sched = Scheduler(t.topology, policy=self.policy,
                                 backend=self.backend, batch=self.batch,
                                 faults=t.fault_records)
-        sched = t.sched
+            sched = t.sched
+        else:
+            sched = t.sched
         t0 = self._now()
         try:
             if batch.kind == "mark_failed":
@@ -480,7 +601,9 @@ class SchedulerService:
 
     def _union_task(self, t: _Tenant, gname: Optional[str],
                     task: int) -> int:
-        assert t.fleet is not None
+        if t.fleet is None:
+            raise ServiceError("internal",
+                               "task degrade needs a live fleet plan")
         names = list(t.graphs)
         if gname is None:
             if len(names) != 1:
@@ -505,13 +628,16 @@ class SchedulerService:
     def _do_plan(self, t: _Tenant, batch: Batch) -> None:
         self._require_session(t)
         for it in batch.items:
-            self.stats.plan_cache_hits += 1
             gname = it.params.get("graph")
+            if gname is not None and gname not in t.graphs:
+                # an unknown graph fails alone, not its batch-mates
+                self._fail_item(it, "bad-request",
+                                f"unknown graph {gname!r} for tenant "
+                                f"{t.name!r}")
+                continue
+            with self._stats_lock:
+                self.stats.plan_cache_hits += 1
             if gname is not None:
-                if gname not in t.graphs:
-                    raise ServiceError(
-                        "bad-request",
-                        f"unknown graph {gname!r} for tenant {t.name!r}")
                 self._resolve(it, self._graph_view(t, gname))
             else:
                 self._resolve(it, self._fleet_view(t))
@@ -521,14 +647,17 @@ class SchedulerService:
         cap = self.max_tenants_per_worker
         if cap is None:
             return
-        live = [t for t in self._tenants.values()
+        # snapshot: runs on a lane thread while the loop may be
+        # inserting new tenants into the dict
+        live = [t for t in list(self._tenants.values())
                 if t.lane == lane and t.sched is not None]
         for t in sorted(live, key=lambda t: t.last_used)[:-cap]:
             # drop the session (plans, traces, compiled instances); the
             # tenant keeps graphs + faults + pinned period and is
             # rebuilt bit-identically on its next request
             t.sched, t.fleet = None, None
-            self.stats.evictions += 1
+            with self._stats_lock:
+                self.stats.evictions += 1
 
     # -- views ---------------------------------------------------------
     def _fleet_view(self, t: _Tenant,
@@ -568,13 +697,28 @@ class SchedulerService:
 
     # -- accounting ----------------------------------------------------
     def _now(self) -> float:
-        # analysis: allow[nondeterminism] latency accounting only, never a scheduling input
-        return asyncio.get_running_loop().time()
+        # monotonic duration probe for latency accounting only, never a
+        # scheduling input (runs on worker-lane threads, off the loop)
+        return time.monotonic()
 
     def _record_replan(self, t0: float, coalesced: int) -> None:
-        self.stats.replans += 1
-        self.stats.coalesced_events += coalesced
-        self.stats.replan_latencies_s.append(self._now() - t0)
+        dt = self._now() - t0
+        with self._stats_lock:
+            self.stats.replans += 1
+            self.stats.coalesced_events += coalesced
+            self.stats.replan_latencies_s.append(dt)
+
+
+def _set_result(fut: "asyncio.Future[Response]", resp: Response) -> None:
+    if not fut.done():
+        fut.set_result(resp)
+
+
+def _set_threadsafe(fut: "asyncio.Future[Response]",
+                    resp: Response) -> None:
+    """Resolve ``fut`` from any thread: batches run on worker-lane
+    threads, but an asyncio future may only be resolved on its loop."""
+    fut.get_loop().call_soon_threadsafe(_set_result, fut, resp)
 
 
 def _replay_view(replay: Optional[ReplayStats]

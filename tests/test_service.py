@@ -368,6 +368,173 @@ class TestService:
         assert svc.stats.evictions >= 1
         assert after == before                 # rebuild is invisible
 
+    def test_task_degrade_matches_update_drift(self):
+        # a service-level compute spike IS the update(task_rates=...)
+        # drift machinery: the final plan views must be bit-identical
+        tg = _tg()
+        g = _graphs(tg, k=1)[0]
+
+        async def drive(op):
+            svc = SchedulerService(tg, _POLICY)
+            c = svc.client("carA")
+            await c.register(g, name="g0")
+            if op == "degrade":
+                r = await asyncio.wait_for(
+                    c.degrade(task=2, factor=1.6), timeout=30)
+            else:
+                r = await c.update(task_rates={2: 1.6}, graph="g0")
+            assert r.ok, r.error
+            return (await c.plan(graph="g0")).result
+
+        assert _run(drive("degrade")) == _run(drive("update"))
+
+    def test_task_degrade_before_register_is_structured_error(self):
+        # regression: this used to AssertionError inside the flush task
+        # (t.fleet is None pre-registration) and strand the client
+        tg = _tg()
+
+        async def main():
+            svc = SchedulerService(tg, _POLICY)
+            c = svc.client("carA")
+            resp = await asyncio.wait_for(
+                c.degrade(task=0, factor=2.0), timeout=30)
+            still = await asyncio.wait_for(
+                c.register(_graphs(tg, k=1)[0], name="g0"), timeout=30)
+            return resp, still
+
+        resp, still = _run(main())
+        assert resp.error["code"] == "no-graphs"
+        assert still.ok                        # the tenant is not wedged
+
+    def test_task_degrade_after_eviction_rebuilds(self):
+        # regression: t.fleet is None after an LRU eviction; the spike
+        # must transparently rebuild, not AssertionError
+        tg = _tg()
+        gs = _graphs(tg, k=2)
+
+        async def main():
+            svc = SchedulerService(tg, _POLICY, workers=1,
+                                   max_tenants_per_worker=1)
+            a, b = svc.client("tA"), svc.client("tB")
+            await a.register(gs[0], name="g0")
+            await b.register(gs[1], name="g1")     # evicts tA's session
+            assert svc._tenants["tA"].sched is None
+            r = await asyncio.wait_for(
+                a.degrade(task=3, factor=1.4), timeout=30)
+            return r, (await a.plan(graph="g0")).result
+
+        r, view = _run(main())
+        assert r.ok, r.error
+        # the rebuilt + degraded plan matches a direct session doing the
+        # same spike with no eviction in between
+        fresh = Scheduler(tg, policy=_POLICY)
+        fresh.submit_many([gs[0]])
+        plan = fresh.degrade(task=3, factor=1.4)
+        assert view["makespan"] == float(plan.makespan)
+        assert view["proc"] == [int(x) for x in plan.schedule.proc]
+
+    def test_task_degrade_after_infeasible_replan(self):
+        # regression: after an infeasible replan t.fleet is None while
+        # t.sched survives; a task degrade must answer "infeasible",
+        # not AssertionError, and a restore must still heal the tenant
+        tg = fully_switched_topology(2, rates=[1.0, 1.0],
+                                     link_speeds=[1.0, 1.0])
+        g = SPG(n=3, edges=[(0, 2), (1, 2)], weights=[4.0, 4.0, 2.0],
+                tpl={(0, 2): 2.0, (1, 2): 2.0}, name="join")
+
+        async def main():
+            svc = SchedulerService(
+                tg, HVLB_CC_B(alpha_max=1.0, alpha_step=1.0))
+            c = svc.client("carA")
+            r0 = await c.register(g, name="join")
+            if len(set(r0.result["proc"][:2])) < 2:
+                return None                   # entries co-located
+            broken = await c.mark_failed(link="l1")
+            spike = await asyncio.wait_for(
+                c.degrade(task=0, factor=2.0), timeout=30)
+            healed = await c.restore(link="l1")
+            return broken, spike, healed
+
+        out = _run(main())
+        if out is None:
+            pytest.skip("entries co-located; no partition to exercise")
+        broken, spike, healed = out
+        assert broken.error["code"] == "infeasible"
+        assert spike.error["code"] == "infeasible"
+        assert healed.ok
+
+    def test_invalid_item_does_not_poison_coalesced_batch(self):
+        # a mixed burst: the invalid update fails alone, the valid ones
+        # fold into one replay, and the final state is bit-identical to
+        # uncoalesced per-item processing
+        tg = _tg()
+        gs = _graphs(tg)
+
+        async def drive(coalesce):
+            svc = SchedulerService(tg, _POLICY, coalesce=coalesce)
+            c = svc.client("carA")
+            await asyncio.gather(*[
+                asyncio.ensure_future(c.register(g, name=g.name))
+                for g in gs])
+            resps = await asyncio.gather(
+                asyncio.ensure_future(c.update(task_rates={1: 1.3},
+                                               graph="g0")),
+                asyncio.ensure_future(c.update(task_rates={999: 1.5},
+                                               graph="g0")),
+                asyncio.ensure_future(c.update(task_rates={2: 0.9},
+                                               graph="g1")),
+            )
+            final = [(await c.plan(graph=g.name)).result for g in gs]
+            return svc, resps, final
+
+        svc_on, on, fin_on = _run(drive(True))
+        svc_off, off, fin_off = _run(drive(False))
+        for resps in (on, off):
+            assert resps[0].ok and resps[2].ok
+            assert resps[1].error["code"] == "bad-request"
+        assert fin_on == fin_off               # bit-identical end state
+        # the two valid events still folded into ONE suffix replay
+        assert on[0].result["replay"]["coalesced"] == 2
+        assert svc_on.stats.replans < svc_off.stats.replans
+
+    def test_register_burst_with_duplicate_keeps_valid_items(self):
+        tg = _tg()
+        gs = _graphs(tg, k=3)
+
+        async def main():
+            svc = SchedulerService(tg, _POLICY)
+            c = svc.client("carA")
+            resps = await asyncio.gather(
+                asyncio.ensure_future(c.register(gs[0], name="a")),
+                asyncio.ensure_future(c.register(gs[1], name="a")),
+                asyncio.ensure_future(c.register(gs[2], name="b")),
+            )
+            return svc, resps
+
+        svc, resps = _run(main())
+        assert resps[0].ok and resps[2].ok
+        assert resps[1].error["code"] == "bad-request"
+        assert list(svc._tenants["carA"].graphs) == ["a", "b"]
+        assert svc.stats.replans == 1          # one replan of the valid pair
+
+    def test_unknown_graph_plan_does_not_poison_batch_mates(self):
+        tg = _tg()
+        gs = _graphs(tg, k=1)
+
+        async def main():
+            svc = SchedulerService(tg, _POLICY)
+            c = svc.client("carA")
+            await c.register(gs[0], name="g0")
+            return await asyncio.gather(
+                asyncio.ensure_future(c.plan(graph="g0")),
+                asyncio.ensure_future(c.plan(graph="nope")),
+                asyncio.ensure_future(c.plan()),
+            )
+
+        good, bad, fleet = _run(main())
+        assert good.ok and fleet.ok
+        assert bad.error["code"] == "bad-request"
+
     def test_stats_op(self):
         tg = _tg()
         gs = _graphs(tg, k=1)
@@ -428,6 +595,38 @@ class TestTcpServer:
         # the plan view equals the update's view (same fleet state)
         assert got[3].result["proc"] == got[2].result["proc"]
         assert got[3].result["makespan"] == got[2].result["makespan"]
+
+    def test_reserved_key_collision_gets_error_response(self):
+        # a JSON-valid request whose extra key collides with the
+        # dispatcher's own parameters must still get a response line —
+        # a silent swallow would hang a pipelined client on that id
+        tg = _tg()
+
+        async def main():
+            svc = SchedulerService(tg, _POLICY)
+            try:
+                server = await serve(svc, "127.0.0.1", 0)
+            except OSError as e:
+                return ("skip", str(e))
+            host, port = server.sockets[0].getsockname()[:2]
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(
+                b'{"id": 6, "op": "plan", "tenant": "carA", "rid": 9}\n')
+            await writer.drain()
+            resp = decode_response(
+                await asyncio.wait_for(reader.readline(), timeout=30))
+            writer.close()
+            await writer.wait_closed()
+            server.close()
+            await server.wait_closed()
+            return ("ok", resp)
+
+        status, resp = _run(main())
+        if status == "skip":
+            pytest.skip(f"cannot bind a localhost socket: {resp}")
+        assert not resp.ok
+        assert resp.id == 6
+        assert resp.error["code"] == "internal"
 
     def test_malformed_line_gets_error_response(self):
         tg = _tg()

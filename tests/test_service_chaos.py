@@ -52,12 +52,18 @@ def _script(rng, tg, tenant, n_ops):
             g.name = f"{tenant}-g{n_graphs}"
             ops.append(("register", {"graph": g, "name": g.name}))
             n_graphs += 1
-        elif r < 0.60:
+        elif r < 0.55:
             gname = f"{tenant}-g{int(rng.integers(n_graphs))}"
             ops.append(("update", {
                 "graph": gname,
                 "task_rates": {int(rng.integers(8)):
                                float(rng.uniform(0.7, 1.6))}}))
+        elif r < 0.60:
+            # deliberately invalid: must fail alone (bad-request) with
+            # zero effect on batch-mates or the final-state oracle
+            gname = f"{tenant}-g{int(rng.integers(n_graphs))}"
+            ops.append(("update", {
+                "graph": gname, "task_rates": {999: 1.5}}))
         elif r < 0.68:
             ops.append(("update", {
                 "link_speed": {links[int(rng.integers(len(links)))]:
@@ -68,9 +74,16 @@ def _script(rng, tg, tenant, n_ops):
                         if rng.random() < 0.5 else
                         {"link": links[int(rng.integers(len(links)))]}))
         elif r < 0.84:
-            ops.append(("degrade",
-                        {"link": links[int(rng.integers(len(links)))],
-                         "factor": float(rng.uniform(1.2, 3.0))}))
+            if rng.random() < 0.5:
+                ops.append(("degrade",
+                            {"link": links[int(rng.integers(len(links)))],
+                             "factor": float(rng.uniform(1.2, 3.0))}))
+            else:                  # compute spike on a live fleet task
+                gname = f"{tenant}-g{int(rng.integers(n_graphs))}"
+                ops.append(("degrade",
+                            {"graph": gname,
+                             "task": int(rng.integers(8)),
+                             "factor": float(rng.uniform(1.1, 2.0))}))
         elif r < 0.92:
             ops.append(("restore",
                         {"proc": int(rng.integers(_P))}
