@@ -1,14 +1,19 @@
 """Static invariant analyzer for the scheduling engine.
 
-Three pure-AST passes (no jax/numpy import, nothing executed):
-:mod:`~repro.analysis.kernels` proves the Pallas carried-state and tile
-layout invariants, :mod:`~repro.analysis.lint` enforces the
-bit-exactness/determinism contract of the decision layer, and
+Four pure-AST passes (no jax/numpy import, nothing executed) over one
+shared :class:`~repro.analysis.index.ProjectIndex` (each file parsed
+exactly once): :mod:`~repro.analysis.kernels` proves the Pallas
+carried-state and tile layout invariants, :mod:`~repro.analysis.lint`
+enforces the bit-exactness/determinism contract of the decision layer,
 :mod:`~repro.analysis.typing_gate` checks every backend against the
-``CandidateEvaluator`` protocol.  Run with ``python -m repro.analysis``;
-see DESIGN.md §7 for the invariant catalogue.
+``CandidateEvaluator`` protocol, and
+:mod:`~repro.analysis.concurrency` proves the service layer's hybrid
+asyncio/thread locking discipline.  Run with ``python -m
+repro.analysis`` (``--format=json`` for machine-readable findings); see
+DESIGN.md §7 for the invariant catalogue and findings schema.
 """
 from .cli import ALL_RULES, main
 from .findings import Finding
+from .index import ProjectIndex, SourceFile
 
-__all__ = ["ALL_RULES", "Finding", "main"]
+__all__ = ["ALL_RULES", "Finding", "ProjectIndex", "SourceFile", "main"]

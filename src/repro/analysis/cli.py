@@ -4,45 +4,47 @@ Two modes:
 
   * **repo mode** (no paths): scan ``src/repro`` with each rule confined
     to its repo scope (kernel rules to ``core/backends/``, decision-layer
-    float lint to ``engine.py``/``api.py``, …) and apply the committed
-    ratchet baseline ``analysis-baseline.txt`` at the repo root.
+    float lint to ``engine.py``/``api.py``, concurrency rules to
+    ``service/``, …) and apply the committed ratchet baseline
+    ``analysis-baseline.txt`` at the repo root.  ``--paths`` narrows the
+    scan to matching path prefixes without changing rule scoping.
   * **explicit mode** (paths given): apply *every* rule to exactly those
-    files with no default baseline — this is what the fixture tests use
-    to demonstrate each rule.
+    files (directories expand to their ``*.py`` trees; the file list is
+    sorted and deduplicated) with no default baseline — this is what the
+    fixture tests use to demonstrate each rule.
+
+All passes share one :class:`~repro.analysis.index.ProjectIndex`, so
+each file is read and parsed exactly once no matter how many passes
+consume it.
 
 Exit codes: 0 clean, 1 findings (or stale baseline entries — the
 ratchet only tightens), 2 broken invocation (missing file, syntax
-error, unknown rule).  All findings print as ``path:line: [rule] msg``.
+error, unknown rule).  Findings print as ``path:line: [rule] msg``, or
+with ``--format=json`` as one JSON object per line carrying ``rule``,
+``path``, ``line``, ``source`` (the stripped source line), the
+suppression ``fingerprint``, and ``message`` — machine-readable for CI
+artifacts and dashboards.
 """
 from __future__ import annotations
 
 import argparse
-import ast
+import json
 import sys
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from . import kernels, lint, typing_gate
+from . import concurrency, kernels, lint, typing_gate
 from .findings import (Finding, apply_baseline, apply_pragmas, fingerprint,
                        load_baseline)
+from .index import ProjectIndex
 
 #: every rule the analyzer knows, with its repo-mode path scope
-ALL_RULES = {**lint.RULES, **kernels.RULES, **typing_gate.RULES}
+ALL_RULES = {**lint.RULES, **kernels.RULES, **typing_gate.RULES,
+             **concurrency.RULES}
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 _SRC_ROOT = Path(__file__).resolve().parents[1]        # src/repro
 DEFAULT_BASELINE = "analysis-baseline.txt"
-
-
-def _parse(path: Path) -> Tuple[Optional[ast.Module], List[str], str]:
-    try:
-        text = path.read_text(encoding="utf-8")
-    except OSError as e:
-        return None, [], f"cannot read {path}: {e}"
-    try:
-        return ast.parse(text, filename=str(path)), text.splitlines(), ""
-    except SyntaxError as e:
-        return None, [], f"{path}:{e.lineno}: syntax error: {e.msg}"
 
 
 def _repo_files() -> List[Tuple[Path, str]]:
@@ -55,24 +57,46 @@ def _repo_files() -> List[Tuple[Path, str]]:
     return out
 
 
+def _explicit_files(raw_paths: Sequence[str]
+                    ) -> Tuple[List[Tuple[Path, str]], Optional[str]]:
+    """Expand/sort/dedupe positional paths.  Directories contribute
+    their ``*.py`` tree; overlapping arguments (``pkg pkg/mod.py``, a
+    file named twice) analyze once.  Returns (files, error)."""
+    collected: List[Tuple[Path, str]] = []
+    for raw in raw_paths:
+        p = Path(raw)
+        if p.is_dir():
+            for sub in sorted(p.rglob("*.py")):
+                collected.append((sub, sub.as_posix()))
+        elif p.is_file():
+            collected.append((p, raw))
+        else:
+            return [], f"no such file or directory: {raw}"
+    seen: Set[Path] = set()
+    files: List[Tuple[Path, str]] = []
+    for p, display in sorted(collected, key=lambda t: t[1]):
+        resolved = p.resolve()
+        if resolved in seen:
+            continue
+        seen.add(resolved)
+        files.append((p, display))
+    return files, None
+
+
 def _collect(files: Sequence[Tuple[Path, str]], repo_mode: bool,
              rules: Optional[set],
              ) -> Tuple[List[Finding], Dict[str, List[str]], List[str]]:
+    index = ProjectIndex()
     findings: List[Finding] = []
-    lines_of: Dict[str, List[str]] = {}
-    errors: List[str] = []
-    trees: List[Tuple[str, ast.Module]] = []
     for path, display in files:
-        tree, lines, err = _parse(path)
-        if tree is None:
-            errors.append(err)
+        sf = index.load(path, display)
+        if sf is None:
             continue
-        lines_of[display] = lines
-        trees.append((display, tree))
-        for f in lint.run(display, tree, lines) + \
-                kernels.run(display, tree, lines):
-            findings.append(f)
-    findings.extend(typing_gate.run(trees))
+        findings.extend(lint.run(sf))
+        findings.extend(kernels.run(sf))
+        findings.extend(concurrency.run(sf))
+    findings.extend(typing_gate.run(index))
+    lines_of = {sf.display: sf.lines for sf in index.files.values()}
 
     if repo_mode:
         findings = [f for f in findings
@@ -81,17 +105,26 @@ def _collect(files: Sequence[Tuple[Path, str]], repo_mode: bool,
         findings = [f for f in findings if f.rule in rules]
     findings = apply_pragmas(findings, lines_of)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
-    return findings, lines_of, errors
+    return findings, lines_of, index.errors
+
+
+def _finding_json(f: Finding, fp: str, lines: List[str]) -> str:
+    source = lines[f.line - 1].strip() if 0 < f.line <= len(lines) else ""
+    return json.dumps({"rule": f.rule, "path": f.path, "line": f.line,
+                       "source": source, "fingerprint": fp,
+                       "message": f.message})
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static invariant analyzer (kernel races/layout, "
-                    "bit-exactness lint, backend protocol gate)")
+                    "bit-exactness lint, backend protocol gate, "
+                    "service concurrency races)")
     ap.add_argument("paths", nargs="*",
-                    help="files to analyze with ALL rules; omit to scan "
-                         "the repo with per-rule scopes + baseline")
+                    help="files/directories to analyze with ALL rules; "
+                         "omit to scan the repo with per-rule scopes + "
+                         "baseline")
     ap.add_argument("--baseline", metavar="FILE",
                     help=f"ratchet file (repo mode default: "
                          f"{DEFAULT_BASELINE} at the repo root, if present)")
@@ -99,6 +132,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write current findings to the baseline and exit 0")
     ap.add_argument("--rules", metavar="ID[,ID...]",
                     help="restrict to a comma-separated subset of rules")
+    ap.add_argument("--paths", dest="path_filter", metavar="PREFIX[,...]",
+                    help="repo mode only: restrict the scan to files whose "
+                         "repo-relative path starts with one of these "
+                         "prefixes (baseline entries outside them are "
+                         "ignored, not stale)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="output format: human text (default) or one JSON "
+                         "finding object per line")
     ap.add_argument("--list-rules", action="store_true",
                     help="print every rule id and exit")
     args = ap.parse_args(argv)
@@ -118,16 +159,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             return 2
 
     repo_mode = not args.paths
+    prefixes: Optional[List[str]] = None
+    if args.path_filter:
+        if not repo_mode:
+            print("error: --paths filters repo-mode scans; with explicit "
+                  "paths just list what you want analyzed", file=sys.stderr)
+            return 2
+        prefixes = [p.strip() for p in args.path_filter.split(",")
+                    if p.strip()]
+
     if repo_mode:
         files = _repo_files()
-    else:
-        files = []
-        for raw in args.paths:
-            p = Path(raw)
-            if not p.is_file():
-                print(f"error: no such file: {raw}", file=sys.stderr)
+        if prefixes is not None:
+            files = [(p, rel) for p, rel in files
+                     if any(rel.startswith(pre) for pre in prefixes)]
+            if not files:
+                print(f"error: --paths {args.path_filter!r} matches no "
+                      f"repo files", file=sys.stderr)
                 return 2
-            files.append((p, raw))
+    else:
+        files, err = _explicit_files(args.paths)
+        if err is not None:
+            print(f"error: {err}", file=sys.stderr)
+            return 2
 
     findings, lines_of, errors = _collect(files, repo_mode, rules)
     if errors:
@@ -166,11 +220,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     stale: List[str] = []
     if baseline_path is not None and baseline_path.is_file():
         entries = load_baseline(str(baseline_path))
+        if prefixes is not None:
+            # entries for unscanned paths are out of sight: neither
+            # applied nor reported stale under a narrowed scan
+            entries = [e for e in entries
+                       if any(e.split("::", 1)[0].startswith(pre)
+                              for pre in prefixes)]
         findings, baselined, stale = apply_baseline(findings, entries, fp_of)
     elif args.baseline:
         print(f"error: baseline file {args.baseline!r} does not exist",
               file=sys.stderr)
         return 2
+
+    if args.format == "json":
+        for f in findings:
+            print(_finding_json(f, fp_of[f], lines_of.get(f.path, [])))
+        for entry in stale:
+            print(json.dumps({"rule": "stale-baseline-entry", "path":
+                              entry.split("::", 1)[0], "line": 0,
+                              "source": "", "fingerprint": entry,
+                              "message": "stale baseline entry (fix is "
+                                         "in — delete the line)"}))
+        return 1 if (findings or stale) else 0
 
     for f in findings:
         print(f.format())

@@ -40,6 +40,7 @@ import ast
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .findings import Finding
+from .index import SourceFile
 
 PAD_TARGETS = frozenset({"LANE", "SUBLANE_F32"})
 DTYPE_LITERALS = frozenset({"float64", "float32"})
@@ -66,22 +67,8 @@ RULES: Dict[str, _Scope] = {
 
 
 # ---------------------------------------------------------------- helpers
-
-def _assignments(scope: ast.AST) -> Dict[str, ast.expr]:
-    """name -> value for single-target Name assignments in a scope
-    (module or function body, nested statements included; last wins)."""
-    env: Dict[str, ast.expr] = {}
-    for node in ast.walk(scope):
-        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
-                and isinstance(node.targets[0], ast.Name):
-            env[node.targets[0].id] = node.value
-    return env
-
-
-def _functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
-    return {node.name: node for node in ast.walk(tree)
-            if isinstance(node, ast.FunctionDef)}
-
+# (the function map and assignment environments come from the shared
+# ProjectIndex — SourceFile.functions / SourceFile.assign_env)
 
 def _is_pallas_call(node: ast.Call) -> bool:
     fn = node.func
@@ -317,10 +304,11 @@ def _check_call(path: str, call: ast.Call, env: Dict[str, ast.expr],
     return out
 
 
-def run(path: str, tree: ast.Module, lines: Sequence[str]) -> List[Finding]:
+def run(sf: SourceFile) -> List[Finding]:
     out: List[Finding] = []
-    funcs = _functions(tree)
-    module_env = _assignments(tree)
+    path, tree = sf.display, sf.tree
+    funcs = sf.functions
+    module_env = sf.assign_env()
 
     # function scopes first (their local spec/kernel assignments shadow
     # module ones); whatever remains is a module-level pallas_call
@@ -332,7 +320,7 @@ def run(path: str, tree: ast.Module, lines: Sequence[str]) -> List[Finding]:
     for scope in scopes:
         env = dict(module_env)
         if scope is not tree:
-            env.update(_assignments(scope))
+            env.update(sf.assign_env(scope))
         for node in ast.walk(scope):
             if isinstance(node, ast.Call) and _is_pallas_call(node) \
                     and id(node) not in checked_kernels:

@@ -27,9 +27,10 @@ from __future__ import annotations
 
 import ast
 import re
-from typing import Callable, Dict, List, Sequence, Set
+from typing import Callable, Dict, List, Set
 
 from .findings import Finding
+from .index import SourceFile
 
 SENTINELS = frozenset({"DOWN_COMP", "DOWN_SPEED", "INFEASIBLE_EFT"})
 FLOAT_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.Pow,
@@ -319,10 +320,10 @@ _CHECKS = {
 }
 
 
-def run(path: str, tree: ast.Module, lines: Sequence[str]) -> List[Finding]:
-    """All lint findings for one parsed file (scope-agnostic — the CLI
+def run(sf: SourceFile) -> List[Finding]:
+    """All lint findings for one indexed file (scope-agnostic — the CLI
     applies repo-mode path scopes)."""
     out: List[Finding] = []
     for check in _CHECKS.values():
-        out.extend(check(path, tree))
+        out.extend(check(sf.display, sf.tree))
     return out

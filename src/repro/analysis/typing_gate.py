@@ -24,9 +24,10 @@ from __future__ import annotations
 import ast
 import shutil
 import subprocess
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional
 
 from .findings import Finding
+from .index import ProjectIndex
 
 BASE_CLASS = "CandidateEvaluator"
 
@@ -74,10 +75,11 @@ def _has_name_attr(cls: ast.ClassDef) -> bool:
     return False
 
 
-def _subclasses_of(tree: ast.Module, base: str) -> List[ast.ClassDef]:
+def _subclasses_of(classes: List[ast.ClassDef],
+                   base: str) -> List[ast.ClassDef]:
     out = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.ClassDef) and node.name != base:
+    for node in classes:
+        if node.name != base:
             for b in node.bases:
                 if (isinstance(b, ast.Name) and b.id == base) or \
                         (isinstance(b, ast.Attribute) and b.attr == base):
@@ -86,27 +88,26 @@ def _subclasses_of(tree: ast.Module, base: str) -> List[ast.ClassDef]:
     return out
 
 
-def _find_base(trees: Sequence[Tuple[str, ast.Module]]
-               ) -> Optional[ast.ClassDef]:
-    for _, tree in trees:
-        for node in ast.walk(tree):
-            if isinstance(node, ast.ClassDef) and node.name == BASE_CLASS:
+def _find_base(index: ProjectIndex) -> Optional[ast.ClassDef]:
+    for sf in index.files.values():
+        for node in sf.classes:
+            if node.name == BASE_CLASS:
                 return node
     return None
 
 
-def run(trees: Sequence[Tuple[str, ast.Module]]) -> List[Finding]:
-    """Cross-file pass: ``trees`` is ``[(display_path, parsed module)]``
-    and must include the file defining :data:`BASE_CLASS` for the gate
-    to have a protocol to check against (otherwise: no findings)."""
-    base_cls = _find_base(trees)
+def run(index: ProjectIndex) -> List[Finding]:
+    """Cross-file pass over the shared index, which must include the
+    file defining :data:`BASE_CLASS` for the gate to have a protocol to
+    check against (otherwise: no findings)."""
+    base_cls = _find_base(index)
     if base_cls is None:
         return []
     protocol = _methods(base_cls)
     out: List[Finding] = []
 
-    for path, tree in trees:
-        for cls in _subclasses_of(tree, BASE_CLASS):
+    for path, sf in index.files.items():
+        for cls in _subclasses_of(sf.classes, BASE_CLASS):
             impl = _methods(cls)
             if not _has_name_attr(cls):
                 out.append(Finding(

@@ -217,6 +217,10 @@ class SchedulerService:
         self._executors: List[Optional[ThreadPoolExecutor]] = \
             [None] * workers                 # lazily, one thread per lane
         self._tenants: Dict[str, _Tenant] = {}
+        # the loop inserts tenants (_tenant) while lane threads snapshot
+        # the table for LRU eviction (_evict_lru); dict mutation during
+        # iteration raises, so both sides take this lock
+        self._tenants_lock = threading.Lock()
         self._lru_tick = 0
         # the event loop holds only weak task refs: anchor flush tasks
         # here or a GC pass could drop one mid-debounce, stranding its
@@ -272,11 +276,12 @@ class SchedulerService:
 
     # ----------------------------------------------------------- routing
     def _tenant(self, name: str) -> _Tenant:
-        t = self._tenants.get(name)
-        if t is None:
-            t = _Tenant(name=name, lane=self.tenant_lane(name),
-                        topology=self.topology)
-            self._tenants[name] = t
+        with self._tenants_lock:
+            t = self._tenants.get(name)
+            if t is None:
+                t = _Tenant(name=name, lane=self.tenant_lane(name),
+                            topology=self.topology)
+                self._tenants[name] = t
         return t
 
     async def _flush_later(self, t: _Tenant) -> None:
@@ -649,7 +654,9 @@ class SchedulerService:
             return
         # snapshot: runs on a lane thread while the loop may be
         # inserting new tenants into the dict
-        live = [t for t in list(self._tenants.values())
+        with self._tenants_lock:
+            snapshot = list(self._tenants.values())
+        live = [t for t in snapshot
                 if t.lane == lane and t.sched is not None]
         for t in sorted(live, key=lambda t: t.last_used)[:-cap]:
             # drop the session (plans, traces, compiled instances); the

@@ -434,6 +434,287 @@ class TestTypingGate:
 
 
 # ----------------------------------------------------------------------
+# concurrency rules (service-layer race detector)
+# ----------------------------------------------------------------------
+
+# the hybrid idiom under test: an async front door, a per-lane thread
+# executor, a threading.Lock around shared state
+SVC_HEADER = """
+            import asyncio
+            import threading
+            import time
+            from concurrent.futures import ThreadPoolExecutor
+"""
+
+
+class TestRaceUnguardedShared:
+    def test_violation_loop_writes_worker_reads(self, tmp_path):
+        out = assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._ex = ThreadPoolExecutor(1)
+                    self._stats = {}
+
+                async def request(self, key):
+                    self._stats[key] = 1
+                    loop = asyncio.get_running_loop()
+                    await loop.run_in_executor(self._ex, self._work, key)
+
+                def _work(self, key):
+                    with self._lock:
+                        self._stats[key] += 1
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "race-unguarded-shared")
+        assert "self._stats" in out and "self._lock" in out
+
+    def test_violation_no_lock_anywhere(self, tmp_path):
+        out = assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._ex = ThreadPoolExecutor(1)
+                    self._seen = set()
+
+                async def request(self, key):
+                    if key in self._seen:
+                        return
+                    loop = asyncio.get_running_loop()
+                    await loop.run_in_executor(self._ex, self._work, key)
+
+                def _work(self, key):
+                    self._seen.add(key)
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "race-unguarded-shared")
+        assert "no access holds a lock" in out
+
+    def test_clean_every_site_guarded(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._ex = ThreadPoolExecutor(1)
+                    self._stats = {}
+                    self.batch = 8        # immutable config: not flagged
+
+                async def request(self, key):
+                    with self._lock:
+                        self._stats[key] = self.batch
+                    loop = asyncio.get_running_loop()
+                    await loop.run_in_executor(self._ex, self._work, key)
+
+                def _work(self, key):
+                    with self._lock:
+                        self._stats[key] += self.batch
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "race-unguarded-shared")
+
+
+class TestAwaitUnderLock:
+    def test_violation_await(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                async def tick(self):
+                    with self._lock:
+                        await asyncio.sleep(0.1)
+            """, "race-await-under-lock")
+
+    def test_violation_lane_lock_acquisition(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self, workers):
+                    self._lock = threading.Lock()
+                    self._locks = [asyncio.Lock() for _ in range(workers)]
+
+                async def flush(self, lane):
+                    with self._lock:
+                        async with self._locks[lane]:
+                            pass
+            """, "race-await-under-lock")
+
+    def test_clean_await_outside_and_alias_resolution(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.n = 0
+
+                async def tick(self):
+                    lock = self._lock
+                    with lock:
+                        self.n += 1
+                    await asyncio.sleep(0.1)
+            """, "race-await-under-lock")
+
+
+class TestLoopBlockingCall:
+    def test_violation_time_sleep(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            async def backoff():
+                time.sleep(0.5)
+            """, "loop-blocking-call")
+
+    def test_violation_direct_scheduler_call(self, tmp_path):
+        out = assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self, sched):
+                    self.sched = sched
+
+                async def replan(self, graph):
+                    self.sched.submit(graph)
+            """, "loop-blocking-call")
+        assert "Scheduler.submit" in out
+
+    def test_violation_future_result(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            async def wait_for(fut):
+                return fut.result()
+            """, "loop-blocking-call")
+
+    def test_clean_worker_side_and_executor_routing(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self, sched):
+                    self.sched = sched
+                    self._ex = ThreadPoolExecutor(1)
+
+                async def replan(self, graph):
+                    await asyncio.sleep(0.01)
+                    loop = asyncio.get_running_loop()
+                    return await loop.run_in_executor(
+                        self._ex, self._run, graph)
+
+                def _run(self, graph):
+                    time.sleep(0.001)     # blocking is fine on a worker
+                    return self.sched.submit(graph)
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "loop-blocking-call")
+
+
+class TestCrossThreadFuture:
+    def test_violation_set_result_from_worker(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            def _resolve(fut, value):
+                fut.set_result(value)
+
+            class Svc:
+                def __init__(self):
+                    self._ex = ThreadPoolExecutor(1)
+
+                async def run(self, fut):
+                    loop = asyncio.get_running_loop()
+                    await loop.run_in_executor(self._ex, _resolve, fut, 1)
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "race-cross-thread-future")
+
+    def test_clean_call_soon_threadsafe_discipline(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            def _set_result(fut, value):
+                if not fut.done():
+                    fut.set_result(value)
+
+            def _resolve(fut, value):
+                fut.get_loop().call_soon_threadsafe(_set_result, fut, value)
+
+            class Svc:
+                def __init__(self):
+                    self._ex = ThreadPoolExecutor(1)
+
+                async def run(self, fut):
+                    loop = asyncio.get_running_loop()
+                    await loop.run_in_executor(self._ex, _resolve, fut, 1)
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+            """, "race-cross-thread-future")
+
+
+class TestLeakExecutor:
+    def test_violation_attribute_never_joined(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._ex = ThreadPoolExecutor(4)
+
+                async def run(self, fn):
+                    loop = asyncio.get_running_loop()
+                    return await loop.run_in_executor(self._ex, fn)
+            """, "leak-executor")
+
+    def test_violation_local_never_shut_down(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            def fan_out(jobs):
+                ex = ThreadPoolExecutor(2)
+                for j in jobs:
+                    ex.submit(j)
+            """, "leak-executor")
+
+    def test_clean_joined_in_close_and_scoped_local(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._ex = ThreadPoolExecutor(4)
+
+                async def run(self, fn):
+                    loop = asyncio.get_running_loop()
+                    return await loop.run_in_executor(self._ex, fn)
+
+                def close(self):
+                    self._ex.shutdown(wait=True)
+
+            def fan_out(jobs):
+                with ThreadPoolExecutor(2) as ex:
+                    return [ex.submit(j) for j in jobs]
+            """, "leak-executor")
+
+
+class TestGcTaskRef:
+    def test_violation_fire_and_forget(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            async def arm(coro):
+                asyncio.create_task(coro)
+            """, "gc-task-ref")
+
+    def test_violation_assigned_but_unanchored(self, tmp_path):
+        assert_finds(tmp_path, SVC_HEADER + """
+            async def arm(coro):
+                task = asyncio.ensure_future(coro)
+                print("armed", task is not None)
+            """, "gc-task-ref")
+
+    def test_clean_anchored_in_container(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            class Svc:
+                def __init__(self):
+                    self._tasks = set()
+
+                async def arm(self, coro):
+                    task = asyncio.get_running_loop().create_task(coro)
+                    self._tasks.add(task)
+                    task.add_done_callback(self._tasks.discard)
+            """, "gc-task-ref")
+
+    def test_clean_awaited(self, tmp_path):
+        assert_clean(tmp_path, SVC_HEADER + """
+            async def arm(coro):
+                task = asyncio.ensure_future(coro)
+                return await task
+            """, "gc-task-ref")
+
+
+# ----------------------------------------------------------------------
 # suppression pragma + ratchet baseline mechanics
 # ----------------------------------------------------------------------
 
@@ -540,7 +821,10 @@ class TestCli:
         for rule in ("kernel-carried-race", "kernel-tile-pad",
                      "kernel-dtype", "float-arith", "sentinel-scope",
                      "nondeterminism", "host-sync", "unused-import",
-                     "protocol-missing", "protocol-signature"):
+                     "protocol-missing", "protocol-signature",
+                     "race-unguarded-shared", "race-await-under-lock",
+                     "loop-blocking-call", "race-cross-thread-future",
+                     "leak-executor", "gc-task-ref"):
             assert rule in rules
 
     def test_findings_carry_file_line_locations(self, tmp_path):
@@ -549,6 +833,129 @@ class TestCli:
         code, out, _ = run_cli([str(path), "--rules", "unused-import"])
         assert code == 1
         assert f"{path}:1: [unused-import]" in out
+
+    def test_directory_arguments_expand_sorted_and_deduped(self, tmp_path):
+        (tmp_path / "b.py").write_text("import os\nx = 1\n")
+        (tmp_path / "a.py").write_text("y = 2\n")
+        # the directory overlaps the explicit file: analyzed once
+        code, out, _ = run_cli([str(tmp_path), str(tmp_path / "b.py"),
+                                "--rules", "unused-import"])
+        assert code == 1
+        assert out.count("[unused-import]") == 1
+        assert "across 2 file(s)" in out
+
+    def test_missing_path_is_config_error(self, tmp_path):
+        code, _, err = run_cli([str(tmp_path / "nope.py")])
+        assert code == 2
+        assert "no such file or directory" in err
+
+    def test_repo_mode_paths_filter(self):
+        code, out, _ = run_cli(["--paths", "src/repro/service/"])
+        assert code == 0, out
+        assert "clean" in out
+
+    def test_paths_filter_without_match_is_config_error(self):
+        code, _, err = run_cli(["--paths", "src/repro/nope/"])
+        assert code == 2
+        assert "matches no repo files" in err
+
+    def test_paths_filter_rejected_in_explicit_mode(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("x = 1\n")
+        code, _, err = run_cli([str(path), "--paths", "src/repro/"])
+        assert code == 2
+        assert "repo-mode" in err
+
+
+class TestJsonFormat:
+    def test_one_object_per_line_with_schema(self, tmp_path):
+        import json
+        path = tmp_path / "fixture.py"
+        path.write_text("import os\nx = 1\n")
+        code, out, _ = run_cli([str(path), "--rules", "unused-import",
+                                "--format", "json"])
+        assert code == 1
+        objs = [json.loads(line) for line in out.splitlines()]
+        assert len(objs) == 1
+        (f,) = objs
+        assert list(f) == ["rule", "path", "line", "source",
+                           "fingerprint", "message"]
+        assert f["rule"] == "unused-import"
+        assert f["path"] == str(path)
+        assert f["line"] == 1
+        assert f["source"] == "import os"
+        assert f["fingerprint"] == f"{path}::unused-import::import os"
+        assert "'os'" in f["message"]
+
+    def test_clean_json_run_prints_nothing(self, tmp_path):
+        path = tmp_path / "fixture.py"
+        path.write_text("x = 1\n")
+        code, out, _ = run_cli([str(path), "--format", "json"])
+        assert code == 0
+        assert out == ""
+
+    def test_stale_baseline_entry_as_object(self, tmp_path):
+        import json
+        path = tmp_path / "fixture.py"
+        path.write_text("import os\nx = 1\n")
+        baseline = tmp_path / "baseline.txt"
+        code, _, _ = run_cli([str(path), "--rules", "unused-import",
+                              "--baseline", str(baseline),
+                              "--write-baseline"])
+        assert code == 0
+        path.write_text("x = 1\n")       # fix it: entry goes stale
+        code, out, _ = run_cli([str(path), "--rules", "unused-import",
+                                "--baseline", str(baseline),
+                                "--format", "json"])
+        assert code == 1
+        (obj,) = [json.loads(line) for line in out.splitlines()]
+        assert obj["rule"] == "stale-baseline-entry"
+        assert obj["fingerprint"].endswith("::unused-import::import os")
+
+
+class TestProjectIndex:
+    def test_repeated_load_parses_once(self, tmp_path):
+        from repro.analysis.index import ProjectIndex
+        path = tmp_path / "mod.py"
+        path.write_text("x = 1\n")
+        index = ProjectIndex()
+        sf1 = index.load(path, "mod.py")
+        sf2 = index.load(path, "mod.py")
+        assert sf1 is sf2
+        assert index.parse_count == 1
+
+    def test_all_passes_share_one_parse_per_file(self, tmp_path,
+                                                 monkeypatch):
+        """The refactor's point: a full CLI run (all four passes) parses
+        each file exactly once."""
+        import ast as ast_module
+        from repro.analysis import index as index_module
+        counts = {}
+        real_parse = ast_module.parse
+
+        def counting_parse(source, filename="<unknown>", *a, **kw):
+            counts[filename] = counts.get(filename, 0) + 1
+            return real_parse(source, filename, *a, **kw)
+
+        monkeypatch.setattr(index_module.ast, "parse", counting_parse)
+        paths = []
+        for name in ("one.py", "two.py", "three.py"):
+            p = tmp_path / name
+            p.write_text("import os\nx = 1\n")
+            paths.append(str(p))
+        code, _, _ = run_cli(paths)
+        assert code == 1                  # unused-import fires
+        assert counts == {p: 1 for p in paths}
+
+    def test_syntax_error_recorded_not_retried(self, tmp_path):
+        from repro.analysis.index import ProjectIndex
+        path = tmp_path / "bad.py"
+        path.write_text("def broken(:\n")
+        index = ProjectIndex()
+        assert index.load(path, "bad.py") is None
+        assert index.load(path, "bad.py") is None
+        assert len(index.errors) == 1
+        assert index.parse_count == 0
 
 
 def test_shipped_repo_analyzes_clean():
