@@ -12,12 +12,30 @@ pass proves on the AST:
     committed store per grid step — two stores, or a store inside a
     loop, is a write-write race once steps overlap on real hardware
     (``kernel-carried-race`` / ``kernel-carried-uncommitted``);
-  * carried blocks require the grid to be 1-D *sequential* — a second
-    grid axis or ``parallel`` dimension semantics would interleave
-    writers (``kernel-grid-carry``);
+  * carried blocks require a *sequential* carry axis — under a 1-D grid
+    the whole grid must be it; under a multi-axis grid (the (A, B)
+    fused-sweep launch, DESIGN.md §5) the carry must be confined to the
+    **innermost** axis: the index map names every grid axis and uses
+    all leading axes to address an independent state copy per outer
+    index — an under-specified index map or ``parallel`` dimension
+    semantics would interleave writers (``kernel-grid-carry``);
   * block shapes must conform to the f32 TPU tile: paddings computed by
     ``pad_dim`` must target ``SUBLANE_F32`` (=8, P axis) or ``LANE``
     (=128, L axis) from layout.py (``kernel-tile-pad``).
+
+The whole-schedule ``lax.scan`` path carries the same state as scan
+*carry leaves* instead of revisited blocks, with the analogous
+invariants proven on the scan body function:
+
+  * every carried leaf must be (re)bound **exactly once** per scan step
+    — a second binding, a binding inside a loop, or a duplicated name
+    in the returned carry tuple aliases two writers onto one leaf
+    (``scan-carry-race``);
+  * every carried leaf must be bound at all — a leaf that is returned
+    but never rebound silently freezes its step-0 value
+    (``scan-carry-uncommitted``).  The initial ``... = carry`` unpack
+    and nested function scopes (``fori_loop`` bodies run their own
+    counting discipline) are excluded from the count.
 
 Plus the dtype policy: kernels take their dtype from the refs
 (``x_ref.dtype``), never from literals, so the f32/f64 switch stays a
@@ -63,6 +81,10 @@ RULES: Dict[str, _Scope] = {
         lambda rel: rel.startswith("src/repro/core/backends/"),
     "kernel-rtol-site":
         lambda rel: rel.startswith("src/repro/"),
+    "scan-carry-race":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
+    "scan-carry-uncommitted":
+        lambda rel: rel.startswith("src/repro/core/backends/"),
 }
 
 
@@ -94,17 +116,23 @@ def _resolve(node: Optional[ast.expr],
     return node
 
 
-def _lambda_uses_first_param(lam: ast.Lambda) -> bool:
+def _lambda_param_used(lam: ast.Lambda, k: int) -> bool:
     params = [a.arg for a in lam.args.args]
-    if not params:
+    if k >= len(params):
         return False
-    first = params[0]
-    return any(isinstance(n, ast.Name) and n.id == first
+    name = params[k]
+    return any(isinstance(n, ast.Name) and n.id == name
                for n in ast.walk(lam.body))
 
 
-def _classify_spec(elem: ast.expr, env: Dict[str, ast.expr]) -> Optional[str]:
-    """'carried' | 'blocked' | None (unresolvable) for one spec element."""
+def _lambda_uses_first_param(lam: ast.Lambda) -> bool:
+    return _lambda_param_used(lam, 0)
+
+
+def _spec_index_map(elem: ast.expr,
+                    env: Dict[str, ast.expr]) -> Optional[ast.Lambda]:
+    """The index-map lambda of one spec element (through the local
+    helper-lambda idiom), or None when not statically visible."""
     blockspec: Optional[ast.Call] = None
     if isinstance(elem, ast.Call) and isinstance(elem.func, ast.Name):
         helper = _resolve(elem.func, env)
@@ -122,7 +150,7 @@ def _classify_spec(elem: ast.expr, env: Dict[str, ast.expr]) -> Optional[str]:
         index_map = blockspec.args[1]
     if not isinstance(index_map, ast.Lambda):
         return None
-    return "blocked" if _lambda_uses_first_param(index_map) else "carried"
+    return index_map
 
 
 def _spec_list(node: Optional[ast.expr],
@@ -214,6 +242,159 @@ class _StoreCounter:
         return self._stores_block(body, False)
 
 
+def _is_scan_call(node: ast.Call) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == "scan"
+    return isinstance(fn, ast.Name) and fn.id == "scan"
+
+
+def _carry_leaves(body_fn: ast.FunctionDef) -> Optional[List[str]]:
+    """The carried leaf names from the scan body's ``return (carry), ys``
+    (or ``return carry, ys`` with a single Name), or None when the
+    carry structure is not statically visible."""
+    ret: Optional[ast.Return] = None
+    for stmt in body_fn.body:
+        if isinstance(stmt, ast.Return):
+            ret = stmt
+    if ret is None or not isinstance(ret.value, ast.Tuple) \
+            or len(ret.value.elts) != 2:
+        return None
+    carry = ret.value.elts[0]
+    if isinstance(carry, ast.Name):
+        return [carry.id]
+    if isinstance(carry, ast.Tuple) \
+            and all(isinstance(e, ast.Name) for e in carry.elts):
+        return [e.id for e in carry.elts]  # type: ignore[union-attr]
+    return None
+
+
+class _NameBindCounter:
+    """Counts (re)bindings per carried leaf name inside a scan body:
+    ``max`` over exclusive if/else branches, ``sum`` over straight-line
+    code; a binding under a loop is recorded separately (it re-executes
+    per iteration).  Nested function scopes are *skipped* — an inner
+    ``fori_loop`` body threads its own state tuple and is not a write
+    to the outer leaf.  The initial ``... = <carry-param>`` unpack is
+    excluded (it reads the previous step's carry, it does not commit
+    this step's)."""
+
+    def __init__(self, names: Sequence[str],
+                 exclude_value_name: Optional[str]) -> None:
+        self.names = set(names)
+        self.exclude = exclude_value_name
+        self.loop_stores: Dict[str, int] = {}
+
+    def _bind_targets(self, tgt: ast.expr) -> List[str]:
+        if isinstance(tgt, ast.Name) and tgt.id in self.names:
+            return [tgt.id]
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            out: List[str] = []
+            for e in tgt.elts:
+                out.extend(self._bind_targets(e))
+            return out
+        return []
+
+    def _binds_in(self, stmt: ast.stmt, in_loop: bool) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+
+        def add(name: str) -> None:
+            if in_loop:
+                self.loop_stores[name] = self.loop_stores.get(name, 0) + 1
+            else:
+                counts[name] = counts.get(name, 0) + 1
+
+        if isinstance(stmt, ast.Assign):
+            if isinstance(stmt.value, ast.Name) \
+                    and stmt.value.id == self.exclude:
+                return counts                 # the initial carry unpack
+            for tgt in stmt.targets:
+                for name in self._bind_targets(tgt):
+                    add(name)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            for name in self._bind_targets(stmt.target):
+                add(name)
+        elif isinstance(stmt, ast.If):
+            body = self._binds_block(stmt.body, in_loop)
+            orelse = self._binds_block(stmt.orelse, in_loop)
+            for name in set(body) | set(orelse):
+                counts[name] = max(body.get(name, 0), orelse.get(name, 0))
+        elif isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                for name in self._bind_targets(stmt.target):
+                    self.loop_stores[name] = \
+                        self.loop_stores.get(name, 0) + 1
+            self._binds_block(stmt.body, True)
+            self._binds_block(stmt.orelse, in_loop)
+        elif isinstance(stmt, (ast.With, ast.Try)):
+            for field in ("body", "orelse", "finalbody"):
+                for name, n in self._binds_block(
+                        getattr(stmt, field, None) or [], in_loop).items():
+                    counts[name] = counts.get(name, 0) + n
+        # nested FunctionDef / AsyncFunctionDef: different scope, skipped
+        return counts
+
+    def _binds_block(self, stmts: Sequence[ast.stmt],
+                     in_loop: bool) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for stmt in stmts:
+            for name, n in self._binds_in(stmt, in_loop).items():
+                total[name] = total.get(name, 0) + n
+        return total
+
+    def count(self, body: Sequence[ast.stmt]) -> Dict[str, int]:
+        return self._binds_block(body, False)
+
+
+def _check_scan(path: str, call: ast.Call,
+                funcs: Dict[str, ast.FunctionDef]) -> List[Finding]:
+    """Scan-carry aliasing rules over one ``lax.scan(body, ...)`` call
+    (module docstring): each carried leaf rebound exactly once per step,
+    no duplicate names in the returned carry tuple."""
+    out: List[Finding] = []
+    body_expr = call.args[0] if call.args else _kw(call, "f")
+    body = funcs.get(body_expr.id) \
+        if isinstance(body_expr, ast.Name) else None
+    if body is None:
+        return out                    # structure not statically visible
+    leaves = _carry_leaves(body)
+    if leaves is None:
+        return out
+    dupes = {n for n in leaves if leaves.count(n) > 1}
+    for name in sorted(dupes):
+        out.append(Finding(
+            "scan-carry-race", path, body.lineno,
+            f"carry leaf {name} appears {leaves.count(name)} times in "
+            f"{body.name}'s returned carry tuple — two carry positions "
+            f"alias one binding"))
+    carry_param = body.args.args[0].arg if body.args.args else None
+    counter = _NameBindCounter(leaves, carry_param)
+    counts = counter.count(body.body)
+    for name in dict.fromkeys(leaves):        # unique, order-preserving
+        if name in dupes:
+            continue
+        looped = counter.loop_stores.get(name, 0)
+        top = counts.get(name, 0)
+        if looped:
+            out.append(Finding(
+                "scan-carry-race", path, body.lineno,
+                f"carry leaf {name} is rebound inside a loop in "
+                f"{body.name} — carried state must be committed exactly "
+                f"once per scan step"))
+        elif top > 1:
+            out.append(Finding(
+                "scan-carry-race", path, body.lineno,
+                f"carry leaf {name} has {top} bindings per scan step in "
+                f"{body.name} — intermediate values of carried state "
+                f"must live under different names"))
+        elif top == 0:
+            out.append(Finding(
+                "scan-carry-uncommitted", path, body.lineno,
+                f"carry leaf {name} is returned by {body.name} but never "
+                f"rebound — the leaf silently freezes its initial value"))
+    return out
+
+
 def _grid_ndim(call: ast.Call, env: Dict[str, ast.expr]) -> Optional[int]:
     grid = _resolve(_kw(call, "grid"), env)
     if isinstance(grid, ast.Tuple):
@@ -250,17 +431,48 @@ def _check_call(path: str, call: ast.Call, env: Dict[str, ast.expr],
             f"in_specs+out_specs supply {n_in}+{n_out}={n_in + n_out}"))
         return out                            # spec->param map is meaningless
 
-    carried_out = [(i, params[n_in + i]) for i, spec in enumerate(out_specs)
-                   if _classify_spec(spec, env) == "carried"]
+    # a block is "carried" when it is revisited across the sequential
+    # (innermost) grid axis: under a 1-D grid the index map ignores its
+    # only param; under a multi-axis grid it ignores the LAST param
+    # (or has too few params to even name that axis).
+    ndim = _grid_ndim(call, env)
+    multi = ndim is not None and ndim > 1
+    carried_out = []
+    for i, spec in enumerate(out_specs):
+        lam = _spec_index_map(spec, env)
+        if lam is None:
+            continue
+        if multi:
+            n_params = len(lam.args.args)
+            revisited = n_params < ndim or \
+                not _lambda_param_used(lam, ndim - 1)
+        else:
+            revisited = not _lambda_uses_first_param(lam)
+        if revisited:
+            carried_out.append((i, params[n_in + i]))
 
     if carried_out:
-        ndim = _grid_ndim(call, env)
-        if ndim is not None and ndim > 1:
-            out.append(Finding(
-                "kernel-grid-carry", path, call.lineno,
-                f"{len(carried_out)} carried output block(s) with a "
-                f"{ndim}-D grid — state carry requires a 1-D sequential "
-                f"grid"))
+        if multi:
+            # multi-axis grid semantics (the (A, B) sweep launch): a
+            # carried block is sound iff its carry is confined to the
+            # innermost (sequential) axis — the index map must name
+            # every grid axis and use all LEADING axes, so each outer
+            # index addresses its own independent state copy; only the
+            # last axis may be ignored (revisited).
+            for i, name in carried_out:
+                lam = _spec_index_map(out_specs[i], env)
+                n_params = 0 if lam is None else len(lam.args.args)
+                if lam is not None and n_params >= ndim and \
+                        all(_lambda_param_used(lam, k)
+                            for k in range(ndim - 1)):
+                    continue
+                out.append(Finding(
+                    "kernel-grid-carry", path, call.lineno,
+                    f"carried output block {name} under a {ndim}-D grid "
+                    f"whose index map does not address every leading "
+                    f"grid axis — outer steps would interleave writers "
+                    f"on one block (the (A, B) sweep contract carries "
+                    f"only on the innermost axis)"))
         if _has_parallel_semantics(call):
             out.append(Finding(
                 "kernel-grid-carry", path, call.lineno,
@@ -326,6 +538,14 @@ def run(sf: SourceFile) -> List[Finding]:
                     and id(node) not in checked_kernels:
                 checked_kernels.add(id(node))
                 out.extend(_check_call(path, node, env, funcs))
+
+    # scan-carry discipline over every lax.scan body in the file
+    checked_scans = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_scan_call(node) \
+                and id(node) not in checked_scans:
+            checked_scans.add(id(node))
+            out.extend(_check_scan(path, node, funcs))
 
     # tile-padding conformance: pad_dim targets must be the layout
     # constants (or 1 = no padding), anywhere in the file

@@ -1105,6 +1105,32 @@ class Scheduler:
             return (SweepResult.from_points(s, 0.0, [(0.0, s.makespan)]),
                     1 if pos else 0, 0 if pos else 1)
 
+        if policy.sweep == "grid" and not (prev_traces and suffix_start) \
+                and inst.sweep_supported(backend):
+            # (A, B) fused sweep (DESIGN.md §5): every grid alpha's whole
+            # schedule in ONE device dispatch.  Fresh grids only — a
+            # resumable update goes through the host loop below, which
+            # replays per-alpha trace prefixes.  Selection matches the
+            # host loop exactly: trace-invariance means the alphas the
+            # host loop would have skipped produce bit-equal schedules
+            # here, and the same strict-improvement rule scans them in
+            # the same order.
+            alphas = [k * policy.alpha_step for k in range(n_steps + 1)]
+            swept = inst.schedule_sweep(queue, alphas, period=period,
+                                        backend=backend, batch=batch)
+            fbest: Optional[Schedule] = None
+            fbest_alpha = 0.0
+            fpoints: List[Tuple[float, float]] = []
+            for alpha, (s, _bnd, tr) in zip(alphas, swept):
+                traces[alpha] = tr
+                fpoints.append((alpha, s.makespan))
+                # analysis: allow[float-arith] strict-improvement epsilon on a reduction over backend outputs, not a per-decision value
+                if fbest is None or s.makespan < fbest.makespan - 1e-12:
+                    fbest, fbest_alpha = s, alpha
+            assert fbest is not None
+            return (SweepResult.from_points(fbest, fbest_alpha, fpoints),
+                    0, len(alphas))
+
         def grid_pass(alphas: Sequence[float], points, best, best_alpha):
             k = 0
             while k < len(alphas):

@@ -28,7 +28,10 @@ as ``max``), so all backends are mutually **bit-identical**
 from __future__ import annotations
 
 import abc
+import time
 from typing import ClassVar, List, Optional, Sequence, Tuple, TYPE_CHECKING
+
+from ..faults import WaveTimeoutError
 
 if TYPE_CHECKING:                                   # pragma: no cover
     from ..engine import CompiledInstance
@@ -123,6 +126,68 @@ class CandidateEvaluator(abc.ABC):
             self.apply(j, d[0], d[1], d[2], d[3])
             decisions.append(d)
         return decisions
+
+    def evaluate_plan(self, waves: Sequence[Sequence[int]],
+                      timeout: Optional[float] = None,
+                      bid0: int = 0) -> List[List[Decision]]:
+        """Evaluate-and-commit a whole **wave plan** (the full schedule).
+
+        The engine's decision layer now emits the complete level-batched
+        wave plan up front (:func:`~..engine.plan_waves` — a pure
+        function of the queue and the precedence edges) and hands it to
+        the backend in one call.  This sequential default walks the plan
+        wave by wave through :meth:`evaluate_batch` — the exact op order
+        of the interleaved engine loop it replaced, so the scalar/vector
+        backends stay bit-exact by construction.  A device backend
+        overrides this to run the *entire* plan in a single dispatch
+        (the Pallas ``lax.scan`` path) and decode one fetch.
+
+        ``timeout`` is the engine's per-wave watchdog budget: the
+        default raises :class:`~..faults.WaveTimeoutError` when one
+        ``evaluate_batch`` overruns it (``bid0 + k`` names the offending
+        wave's batch id); a whole-plan backend compares its single
+        dispatch against ``timeout * len(waves)``.
+
+        Contract: returns one decision list per wave, ``waves[k]``
+        order; run state afterwards equals the sequential walk's.
+        """
+        out: List[List[Decision]] = []
+        for k, wave in enumerate(waves):
+            if timeout is None:
+                out.append(self.evaluate_batch(wave))
+            else:
+                t0 = time.monotonic()
+                out.append(self.evaluate_batch(wave))
+                elapsed = time.monotonic() - t0
+                if elapsed > timeout:
+                    raise WaveTimeoutError(bid0 + k, elapsed, timeout)
+        return out
+
+    # ------------------------------------------------------- fused sweep
+    def supports_plan_sweep(self) -> bool:
+        """Whether :meth:`evaluate_plan_sweep` evaluates a whole alpha
+        grid in one dispatch.  Default: no — the session API keeps the
+        (trace-invariance-pruned) host-side per-alpha loop."""
+        return False
+
+    def evaluate_plan_sweep(self, waves: Sequence[Sequence[int]],
+                            alphas: Sequence[float], period: float,
+                            timeout: Optional[float] = None
+                            ) -> List[List[List[Decision]]]:
+        """Evaluate one wave plan under *every* alpha of a sweep grid in
+        a single dispatch (the (A, B) fused launch, DESIGN.md §5).
+
+        Returns ``[alpha][wave] -> decisions`` with per-alpha decisions
+        identical to ``len(alphas)`` independent :meth:`evaluate_plan`
+        runs.  Decodes with bound tracking (``cand_A``/``cand_B``
+        populated) so the recorded traces resume exactly like host-loop
+        sweep traces.  Must NOT commit to the backend's run state — the
+        per-alpha runs are independent; callers re-``start()`` before
+        reusing the instance.  Only called when
+        :meth:`supports_plan_sweep` is true.
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} does not fuse alpha sweeps")
 
     # ------------------------------------------------------------ commit
     def apply(self, j: int, p: int, est: float, eft: float,

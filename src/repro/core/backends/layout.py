@@ -34,7 +34,8 @@ if TYPE_CHECKING:                                   # pragma: no cover
     from ..engine import CompiledInstance
 
 __all__ = ["LANE", "SUBLANE_F32", "SrcLayout", "edge_ct", "ensure_ct_table",
-           "pad_dim", "padded_edge_ct", "padded_src_tensors", "src_layout"]
+           "pad_dim", "padded_edge_ct", "padded_src_tensors", "src_layout",
+           "stacked_edge_ct", "stacked_src_tensors"]
 
 _NEG_INF = float("-inf")
 
@@ -253,6 +254,67 @@ def padded_src_tensors(inst: "CompiledInstance", src: int, R: int, H: int,
     nhops = np.zeros((R, Pp))
     nhops[:lay.R, :P] = lay.nhops.T
     return masks, valid, nhops
+
+
+def stacked_src_tensors(inst: "CompiledInstance", R: int, H: int,
+                        Pp: int, Lp: int) -> Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    """Route tensors of **every** source processor, stacked on a leading
+    src axis, for the device-resident scan path (DESIGN.md §5).
+
+    The whole-schedule ``lax.scan`` cannot stage per-predecessor tensors
+    on the host (a predecessor's placement is decided *inside* the scan),
+    so the backend uploads the full ``(P + 1, ...)`` stack once and the
+    scan body gathers row ``proc_of[pred]`` dynamically.  Row ``P`` is
+    the **padding predecessor** plane — all-zero masks, one valid
+    zero-hop route per lane — mirroring the per-wave path's pad tensors:
+    a padded slot's arrival/commit contributions drop out of the exact
+    max algebra.
+
+    Returns ``(masks, valid, nhops)`` shaped ``(P + 1, R, H, Pp, Lp)`` /
+    ``(P + 1, R, Pp)`` / ``(P + 1, R, Pp)`` (float64; the backend casts
+    on upload).
+    """
+    P = inst.P
+    masks = np.zeros((P + 1, R, H, Pp, Lp))
+    valid = np.zeros((P + 1, R, Pp))
+    nhops = np.zeros((P + 1, R, Pp))
+    for s in range(P):
+        masks[s], valid[s], nhops[s] = padded_src_tensors(
+            inst, s, R, H, Pp, Lp)
+    valid[P, 0, :] = 1.0             # pad src: fake zero-hop route 0
+    return masks, valid, nhops
+
+
+def stacked_edge_ct(inst: "CompiledInstance", R: int, H: int, Pp: int,
+                    Ep: int) -> np.ndarray:
+    """Eq. 15 CTML of **every** edge from **every** source, stacked to
+    ``(Ep, P + 1, R, H, Pp)`` for the scan path's dynamic double gather
+    ``ct[edge_index, proc_of[pred]]``.
+
+    ``Ep >= E + 1``: rows ``>= E`` and source plane ``P`` are the
+    padding-predecessor convention (``-inf`` everywhere — a no-op of the
+    Eq. 13-14 max algebra; the pad source's fake route 0 is validated in
+    :func:`stacked_src_tensors`).  Built from the per-src all-edge
+    tables (:func:`ensure_ct_table`), so the floats are bit-identical to
+    the per-wave path's :func:`padded_edge_ct` views.
+    """
+    E = len(inst._edge_index)
+    assert Ep >= E + 1
+    full = np.full((Ep, inst.P + 1, R, H, Pp), _NEG_INF)
+    for s in range(inst.P):
+        lay = src_layout(inst, s)
+        if E == 0:
+            continue
+        tab = lay.ct_table
+        if tab is None:
+            tab = ensure_ct_table(inst, lay)
+        if lay.R == 1:
+            full[:E, s, 0, :lay.H, :lay.P] = tab         # (E, H, P)
+        else:
+            full[:E, s, :lay.R, :lay.H, :lay.P] = \
+                tab.transpose(0, 2, 3, 1)                # (E, P, R, H)
+    return full
 
 
 def padded_edge_ct(inst: "CompiledInstance", lay: SrcLayout, i: int, j: int,

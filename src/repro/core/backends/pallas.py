@@ -74,15 +74,36 @@ Unlike the NumPy vector backend, masked per-hop reads/writes do not
 require link-disjoint routes: hops are walked sequentially, so a route
 may revisit a link.
 
+**Whole-schedule scan path** (the default, DESIGN.md §5): on top of the
+per-wave kernel this module also folds the *entire* wave plan into one
+jitted ``lax.scan`` dispatch (``evaluate_plan``).  The engine emits the
+complete level-batched plan up front (``engine.plan_waves``); the host
+stages stacked per-wave inputs (task ids, predecessor ids + edge
+indices, exit/real flags) plus the all-source route tensors
+(``layout.stacked_src_tensors`` / ``stacked_edge_ct``), and the scan
+body — pure ``jnp``, the exact op-for-op algebra of the per-wave kernel
+— carries ``(link_free, proc_free, loads, loads/period, BP, aft,
+proc_of)`` wave to wave, sorting each decision's predecessors by the
+device-resident ``(aft, id)`` key (``jnp.lexsort``) and gathering their
+source rows dynamically.  One upload, one launch, one blocking fetch
+per schedule: host round-trips drop O(levels) -> O(1).  The HVLB_CC
+alpha sweep folds in as one more batch axis (``evaluate_plan_sweep``):
+a ``vmap`` over the alpha grid evaluates every alpha's schedule in the
+same dispatch.  ``REPRO_PALLAS_SCAN=0`` falls back to the per-wave
+kernel loop (which also serves single-decision ``evaluate`` protocol
+calls and remains the numerics reference for the scan).
+
 ``n_launches`` / ``n_roundtrips`` / ``n_state_uploads`` count kernel
 launches, blocking device->host transfers, and host->device state
 re-uploads; ``benchmarks/exp7`` records launches per schedule and the
-CI gate holds them at O(levels).
+CI gate holds the per-schedule total at a constant (<= 3: upload,
+dispatch, fetch) on the scan path and O(levels) on the per-wave path.
 """
 from __future__ import annotations
 
 import functools
 import os
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -92,8 +113,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from .base import CandidateEvaluator, Decision
+from ..faults import WaveTimeoutError
 from .layout import (LANE, SUBLANE_F32, pad_dim, padded_edge_ct,
-                     padded_src_tensors, src_layout)
+                     padded_src_tensors, src_layout, stacked_edge_ct,
+                     stacked_src_tensors)
 
 _INF = float("inf")
 _NEG_INF = float("-inf")
@@ -151,6 +174,18 @@ def _use_tile(interpret: bool) -> bool:
     if env is not None:
         return env not in ("0", "false", "False")
     return not interpret
+
+
+def _use_scan() -> bool:
+    """Whole-schedule ``lax.scan`` dispatch (one launch per schedule)
+    vs the per-wave kernel loop.  On by default — the two paths are
+    decision-identical (f64) / near-tie-policy-identical (f32);
+    ``REPRO_PALLAS_SCAN=0`` forces the per-wave loop (exp7 uses the
+    toggle to time both)."""
+    env = os.environ.get("REPRO_PALLAS_SCAN")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return True
 
 
 def _bucket(b: int) -> int:
@@ -358,6 +393,207 @@ def _compiled_run(B: int, K: int, R: int, H: int, P: int, L: int,
     return run
 
 
+def _scan_run(W: int, B: int, K: int, R: int, H: int, Pp: int, Lp: int,
+              Np: int, Ep: int, A: int, f32: bool):
+    """Jitted whole-schedule runner: ``lax.scan`` over ``W`` stacked
+    waves of ``B`` decision slots (module docstring; DESIGN.md §5).
+
+    Cached per **padded** static signature — ``(W, B)`` bucketed wave
+    count/width, predecessor/route/hop maxima, tile-padded ``(Pp, Lp)``,
+    bucketed task/edge counts ``(Np, Ep)``, and the bucketed alpha-grid
+    width ``A`` (0 = no sweep axis) — so graphs with the same padded
+    shape share one compilation.
+
+    The scan body replays the per-wave kernel's algebra op for op; the
+    only new arithmetic is *ordering*, not values: each slot sorts its
+    predecessors by the device-carried ``(aft, id)`` key (the scalar
+    reference's host-side sort — unknowable on the host here because a
+    predecessor's AFT is decided inside the scan) and gathers that
+    predecessor's route tensors by its carried placement.  Padded slots
+    (``real = 0``), padded waves (all-pad rows) and padded predecessors
+    (pad source plane ``P``, pad edge row ``Ep - 1``) drop out of the
+    exact max algebra exactly like the per-wave pad tensors.
+
+    With ``A > 0`` the whole scan is ``vmap``-ed over a ``(A,)`` alpha
+    vector — the (A, B) fused sweep grid: every alpha's schedule
+    evolves its own independent carry inside the same dispatch.
+    """
+    key = ("scan", W, B, K, R, H, Pp, Lp, Np, Ep, A, f32)
+    run = _RUN_CACHE.pop(key, None)
+    if run is not None:
+        _RUN_CACHE[key] = run
+        return run
+    f = jnp.float32 if f32 else jnp.float64
+    i32 = jnp.int32
+
+    def schedule(alpha, period, task, real, pred, pvalid, edge, exitf,
+                 masks_all, valid_all, nhops_all, ct_all, comp_all,
+                 ldet_all, lf0, pf0, loads0, lop0, bp0, aft0, proc0):
+        one = jnp.array(1.0, dtype=f)
+        neg = jnp.array(_NEG_INF, dtype=f)
+        pad_src = jnp.int32(masks_all.shape[0] - 1)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (Pp, 1), 0)[:, 0]
+
+        def wave_step(carry, xs):
+            lf, pf, loads, lop, bp, aft_t, proc_t = carry
+            w_task, w_real, w_pred, w_pvalid, w_edge, w_exit = xs
+
+            def slot(b, st):
+                (lf, pf, loads, lop, bp, aft_t, proc_t,
+                 win_o, est_o, eft_o, a_o, b_o, lst_o, lft_o,
+                 bestr_o) = st
+                j = w_task[b]
+                is_real = w_real[b] > 0
+                is_exit = w_exit[b] > 0
+                pv = w_pvalid[b] > 0
+                # the scalar reference's (aft, id) predecessor order,
+                # computed on device from the carried AFT; invalid slots
+                # sort last on the (+inf, Np) key and read the pad
+                # source plane / pad edge row
+                paft = jnp.where(pv, aft_t[w_pred[b]], _INF)
+                pkey = jnp.where(pv, w_pred[b], jnp.int32(Np))
+                perm = jnp.lexsort((pkey, paft))
+                sp = w_pred[b][perm]
+                spv = pv[perm]
+                s_aft = jnp.where(spv, aft_t[sp], neg)
+                s_src = jnp.where(spv, proc_t[sp], pad_src)
+                s_edge = jnp.where(spv, w_edge[b][perm], jnp.int32(Ep - 1))
+
+                comp_j = comp_all[j]
+                ldet_j = ldet_all[j]
+                lane = jnp.broadcast_to(lf, (Pp, Lp))
+                arrival = jnp.full((Pp,), _NEG_INF, dtype=f)
+                sel_lsts = []
+                sel_lfts = []
+                bestrs = []
+                for k in range(K):
+                    aft_i = s_aft[k]
+                    m_k = masks_all[s_src[k]]
+                    ct_k = ct_all[s_edge[k], s_src[k]]
+                    v_k = valid_all[s_src[k]]
+                    nh_k = nhops_all[s_src[k]]
+                    r_lst = []
+                    r_lft = []
+                    r_final = []
+                    for r in range(R):
+                        lst = lft = None
+                        lsts = []
+                        lfts = []
+                        for h in range(H):
+                            m = m_k[r, h]                    # (Pp, Lp)
+                            avail = jnp.max(jnp.where(m > 0, lane, neg),
+                                            axis=1)
+                            lst = jnp.maximum(avail, aft_i) if h == 0 \
+                                else jnp.maximum(lst, avail)     # Eq. 13
+                            x = lst + ct_k[r, h]
+                            lft = x if h == 0 else jnp.maximum(lft, x)
+                            lsts.append(lst)
+                            lfts.append(lft)
+                        r_lst.append(lsts)
+                        r_lft.append(lfts)
+                        r_final.append(jnp.where(v_k[r] > 0, lft, _INF))
+                    best_f = r_final[0]
+                    best_nh = nh_k[0]
+                    best_r = jnp.zeros((Pp,), jnp.int32)
+                    for r in range(1, R):
+                        fv = r_final[r]
+                        nh = nh_k[r]
+                        better = (fv < best_f) | ((fv == best_f) &
+                                                  (nh < best_nh))
+                        best_f = jnp.where(better, fv, best_f)
+                        best_nh = jnp.where(better, nh, best_nh)
+                        best_r = jnp.where(better, jnp.int32(r), best_r)
+                    sl = []
+                    sf = []
+                    for h in range(H):
+                        sel_lst = r_lst[0][h]
+                        sel_lft = r_lft[0][h]
+                        sel_m = m_k[0, h]
+                        for r in range(1, R):
+                            pick = best_r == r
+                            sel_lst = jnp.where(pick, r_lst[r][h], sel_lst)
+                            sel_lft = jnp.where(pick, r_lft[r][h], sel_lft)
+                            sel_m = jnp.where(pick[:, None], m_k[r, h],
+                                              sel_m)
+                        lane = jnp.where(sel_m > 0, sel_lft[:, None], lane)
+                        sl.append(sel_lst)
+                        sf.append(sel_lft)
+                    sel_lsts.append(jnp.stack(sl))
+                    sel_lfts.append(jnp.stack(sf))
+                    bestrs.append(best_r)
+                    arrival = jnp.maximum(arrival, best_f)
+
+                est = jnp.maximum(arrival, pf)               # Eqs. 10-11
+                eft = est + comp_j                           # Eq. 12
+                a = eft * ldet_j
+                value = a * jnp.where(is_exit, one, bp)      # Def. 4.2
+                vmin = jnp.min(value)
+                tie = value == vmin
+                emin = jnp.min(jnp.where(tie, eft, _INF))
+                tie &= eft == emin
+                w = jnp.min(jnp.where(tie, idx, jnp.int32(Pp)))
+                cb = a * lop         # pre-commit loads/period, as scalar
+                onehot = (idx == w) & is_real
+                win_col = jnp.max(jnp.where(onehot[:, None], lane, neg),
+                                  axis=0)
+                lf = jnp.where(is_real, win_col, lf)
+                pf = jnp.where(onehot, eft, pf)
+                loads = jnp.where(onehot, loads + comp_j, loads)
+                lop = jnp.where(onehot, loads / period, lop)
+                bp = jnp.where(onehot, one + lop * alpha, bp)  # Def. 4.1
+                eft_w = eft[w]
+                aft_t = aft_t.at[j].set(jnp.where(is_real, eft_w,
+                                                  aft_t[j]))
+                proc_t = proc_t.at[j].set(jnp.where(is_real, w,
+                                                    proc_t[j]))
+                win_o = win_o.at[b].set(w)
+                est_o = est_o.at[b].set(est)
+                eft_o = eft_o.at[b].set(eft)
+                a_o = a_o.at[b].set(a)
+                b_o = b_o.at[b].set(cb)
+                lst_o = lst_o.at[b].set(jnp.stack(sel_lsts))
+                lft_o = lft_o.at[b].set(jnp.stack(sel_lfts))
+                bestr_o = bestr_o.at[b].set(jnp.stack(bestrs))
+                return (lf, pf, loads, lop, bp, aft_t, proc_t,
+                        win_o, est_o, eft_o, a_o, b_o, lst_o, lft_o,
+                        bestr_o)
+
+            st = (lf, pf, loads, lop, bp, aft_t, proc_t,
+                  jnp.zeros((B,), i32),
+                  jnp.zeros((B, Pp), f), jnp.zeros((B, Pp), f),
+                  jnp.zeros((B, Pp), f), jnp.zeros((B, Pp), f),
+                  jnp.zeros((B, K, H, Pp), f),
+                  jnp.zeros((B, K, H, Pp), f),
+                  jnp.zeros((B, K, Pp), i32))
+            st = jax.lax.fori_loop(0, B, slot, st)
+            lf, pf, loads, lop, bp, aft_t, proc_t = st[:7]
+            return (lf, pf, loads, lop, bp, aft_t, proc_t), st[7:]
+
+        carry0 = (lf0, pf0, loads0, lop0, bp0, aft0, proc0)
+        xs = (task, real, pred, pvalid, edge, exitf)
+        _, ys = jax.lax.scan(wave_step, carry0, xs)
+        return ys
+
+    if A:
+        def run(alphas, period, task, real, pred, pvalid, edge, exitf,
+                masks_all, valid_all, nhops_all, ct_all, comp_all,
+                ldet_all, lf0, pf0, loads0, lop0, bp0, aft0, proc0):
+            def one(al):
+                return schedule(al, period, task, real, pred, pvalid,
+                                edge, exitf, masks_all, valid_all,
+                                nhops_all, ct_all, comp_all, ldet_all,
+                                lf0, pf0, loads0, lop0, bp0, aft0, proc0)
+            return jax.vmap(one)(alphas)
+
+        run = jax.jit(run)
+    else:
+        run = jax.jit(schedule)
+    _RUN_CACHE[key] = run
+    while len(_RUN_CACHE) > _RUN_CACHE_MAX:
+        _RUN_CACHE.popitem(last=False)
+    return run
+
+
 class PallasBackend(CandidateEvaluator):
     """Device-batched candidate evaluation: one Pallas kernel per wave."""
 
@@ -401,6 +637,13 @@ class PallasBackend(CandidateEvaluator):
         ldet_pad[inst._is_exit, :] = 1.0
         self._comp_rows = comp_pad.astype(self._np_dtype)
         self._ldet_rows = ldet_pad.astype(self._np_dtype)
+        # scan-path consts: bucketed task/edge axes for the carried
+        # aft/proc arrays and the stacked all-edge CT table; the device
+        # stacks themselves are built lazily on the first plan dispatch
+        self._Np = _bucket(inst.n)
+        self._Ep = _bucket(len(inst._edge_index) + 1)
+        self._scan_dev: Optional[tuple] = None
+        self._scan_in_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
         # instrumentation (read by benchmarks/exp7 and the tests)
         self.n_launches = 0
         self.n_roundtrips = 0
@@ -613,3 +856,228 @@ class PallasBackend(CandidateEvaluator):
         # the kernel runs with is_real = 0, so the device carry passes
         # through unchanged and the caller commits via apply()
         return self._run_batch([j], commit=False)[0]
+
+    # ----------------------------------------------- whole-schedule scan
+    def _scan_tables(self) -> tuple:
+        """Device-resident all-source/all-edge stacks for the scan's
+        dynamic gathers (built once per backend; a few MB at exp7
+        scale).  Task-indexed comp/ldet rows are padded to the bucketed
+        ``Np`` (pad rows are never gathered — task ids are < n)."""
+        if self._scan_dev is None:
+            inst = self.inst
+            n, Np = inst.n, self._Np
+            masks, valid, nhops = stacked_src_tensors(
+                inst, self._R, self._H, self._Pp, self._Lp)
+            ct = stacked_edge_ct(inst, self._R, self._H, self._Pp,
+                                 self._Ep)
+            comp = np.zeros((Np, self._Pp))
+            comp[:n] = self._comp_rows
+            ldet = np.ones((Np, self._Pp))
+            ldet[:n] = self._ldet_rows
+            self._scan_dev = tuple(
+                self._to_dev(x)
+                for x in (masks, valid, nhops, ct, comp, ldet))
+        return self._scan_dev
+
+    def _scan_inputs(self, waves: Sequence[Sequence[int]]) -> tuple:
+        """Stacked per-wave scan inputs (task/pred/edge ids + flags),
+        bucket-padded on both the wave and slot axes; predecessors stay
+        in graph order — the scan body sorts them by the carried
+        ``(aft, id)`` key.  Cached per wave plan (a session re-plans the
+        same queue; ``update()`` suffixes add a handful of entries)."""
+        key = tuple(tuple(w) for w in waves)
+        cached = self._scan_in_cache.pop(key, None)
+        if cached is not None:
+            self._scan_in_cache[key] = cached
+            return cached
+        inst = self.inst
+        K, Ep = self._K, self._Ep
+        Wp = _bucket(len(waves))
+        Bp = _bucket(max(len(w) for w in waves))
+        task = np.zeros((Wp, Bp), np.int32)
+        real = np.zeros((Wp, Bp))
+        pred = np.zeros((Wp, Bp, K), np.int32)
+        pvalid = np.zeros((Wp, Bp, K))
+        edge = np.full((Wp, Bp, K), Ep - 1, np.int32)
+        exitf = np.zeros((Wp, Bp))
+        eidx = inst._edge_index
+        for wv, js in enumerate(waves):
+            for b, j in enumerate(js):
+                task[wv, b] = j
+                real[wv, b] = 1.0
+                if inst._is_exit[j]:
+                    exitf[wv, b] = 1.0
+                for k, i in enumerate(inst._preds[j]):
+                    pred[wv, b, k] = i
+                    pvalid[wv, b, k] = 1.0
+                    edge[wv, b, k] = eidx[(i, j)]
+        cached = (Wp, Bp, task, real, pred, pvalid, edge, exitf)
+        self._scan_in_cache[key] = cached
+        while len(self._scan_in_cache) > 8:
+            self._scan_in_cache.popitem(last=False)
+        return cached
+
+    def _scan_dispatch(self, waves: Sequence[Sequence[int]],
+                       alphas: Optional[Sequence[float]]) -> tuple:
+        """Stage, launch, and fetch one whole-schedule scan: the initial
+        carry comes from the f64 host mirrors (so a replayed trace
+        prefix is already folded in), and the single blocking fetch
+        returns every wave's winner/EST/EFT/LST/LFT/route arrays."""
+        inst = self.inst
+        P, Pp, L, Lp = inst.P, self._Pp, self._L, self._Lp
+        n, Np = inst.n, self._Np
+        Wp, Bp, task, real, pred, pvalid, edge, exitf = \
+            self._scan_inputs(waves)
+        consts = self._scan_tables()
+        dt = self._np_dtype
+        lf = np.zeros(Lp)
+        lf[:L] = self.link_free
+        pf = np.zeros(Pp)
+        pf[:P] = self.proc_free
+        loads = np.zeros(Pp)
+        loads[:P] = self.loads
+        lop = np.zeros(Pp)
+        lop[:P] = self._lop
+        bp = np.ones(Pp)
+        bp[:P] = self._bp
+        aft0 = np.zeros(Np)
+        aft0[:n] = self.aft
+        # unscheduled tasks point at the pad source plane P (only ever
+        # gathered through a scheduled predecessor, but a negative index
+        # would wrap)
+        proc0 = np.full(Np, P, np.int32)
+        proc0[:n] = [p if p >= 0 else P for p in self.proc_of]
+        if alphas is None:
+            Ap = 0
+            a_arg = np.asarray(self.alpha, dtype=dt)
+        else:
+            Ap = _bucket(len(alphas))
+            a_arg = np.asarray(
+                list(alphas) + [alphas[-1]] * (Ap - len(alphas)),
+                dtype=dt)
+        run = _scan_run(Wp, Bp, self._K, self._R, self._H, Pp, Lp, Np,
+                        self._Ep, Ap, self._f32)
+        args = (a_arg, np.asarray(self.period, dtype=dt),
+                task, real.astype(dt), pred, pvalid.astype(dt), edge,
+                exitf.astype(dt), *consts,
+                lf.astype(dt), pf.astype(dt), loads.astype(dt),
+                lop.astype(dt), bp.astype(dt), aft0.astype(dt), proc0)
+        if self._f32:
+            out = run(*args)
+        else:
+            with jax.experimental.enable_x64():
+                out = run(*args)
+        self.n_launches += 1
+        self.n_state_uploads += 1    # the initial-carry staging above
+        fetched = jax.device_get(out)  # analysis: allow[host-sync] the documented one-per-SCHEDULE transfer (DESIGN.md §5); all decisions decode from this single fetch
+        self.n_roundtrips += 1
+        return tuple(fetched)
+
+    def _decode_scan(self, waves: Sequence[Sequence[int]], outs: tuple,
+                     alpha: float, commit: bool,
+                     want_bound: bool) -> List[List[Decision]]:
+        """Decode one schedule's fetched scan outputs into per-wave
+        decision lists.  The host re-derives each decision's sorted
+        predecessor order from the (already decoded) committed AFT
+        mirrors — f64 -> kernel-dtype casting is monotone, so it matches
+        the device's ``(aft, id)`` sort on the f64 path exactly (and
+        within the near-tie policy on f32)."""
+        inst = self.inst
+        P = inst.P
+        win, est, eft, ca_all, cb_all, lst, lft, bestr = outs
+        if commit:
+            aft_l, proc_l = self.aft, self.proc_of
+        else:
+            aft_l, proc_l = list(self.aft), list(self.proc_of)
+        out: List[List[Decision]] = []
+        for wv, js in enumerate(waves):
+            ds: List[Decision] = []
+            for b, j in enumerate(js):
+                p = int(win[wv, b])
+                preds = inst._preds[j]
+                if len(preds) > 1:
+                    preds = sorted(preds, key=lambda i: (aft_l[i], i))
+                msgs = []
+                for k, i in enumerate(preds):
+                    src = proc_l[i]
+                    if src == p:
+                        continue
+                    r = int(bestr[wv, b, k, p])
+                    lids, robj = inst._src_layouts[src].route_meta[p][r]
+                    msgs.append((i, robj,
+                                 [(lids[h], float(lst[wv, b, k, h, p]),
+                                   float(lft[wv, b, k, h, p]))
+                                  for h in range(len(lids))]))
+                track = want_bound and not inst._is_exit[j]
+                if track:
+                    ca = tuple(float(x) for x in ca_all[wv, b, :P])
+                    cb = tuple(float(x) for x in cb_all[wv, b, :P])
+                    contrib = self.crossing(p, ca, cb, alpha)
+                else:
+                    ca = cb = None
+                    contrib = _INF
+                d: Decision = (p, float(est[wv, b, p]),
+                               float(eft[wv, b, p]), msgs, ca, cb,
+                               contrib)
+                if commit:
+                    # f64 host mirrors in lockstep, as on the wave path
+                    self._commit_host(j, d[0], d[1], d[2], d[3])
+                else:
+                    # sweep decode: per-alpha locals only — the run
+                    # state must stay untouched
+                    proc_l[j] = p
+                    aft_l[j] = d[2]
+                ds.append(d)
+            out.append(ds)
+        return out
+
+    def evaluate_plan(self, waves: Sequence[Sequence[int]],
+                      timeout: Optional[float] = None,
+                      bid0: int = 0) -> List[List[Decision]]:
+        """One ``lax.scan`` dispatch for the whole plan (module
+        docstring); falls back to the per-wave kernel loop when
+        ``REPRO_PALLAS_SCAN=0``.  The watchdog compares the single
+        dispatch against the aggregate budget ``timeout * len(waves)``.
+        """
+        if not _use_scan() or not waves:
+            return super().evaluate_plan(waves, timeout=timeout,
+                                         bid0=bid0)
+        t0 = time.monotonic()
+        outs = self._scan_dispatch(waves, None)
+        if timeout is not None:
+            elapsed = time.monotonic() - t0
+            budget = timeout * len(waves)
+            if elapsed > budget:
+                raise WaveTimeoutError(bid0, elapsed, budget)
+        # the per-wave device carry is now stale relative to the
+        # mirrors; any later per-wave launch re-uploads first
+        self._state_dirty = True
+        return self._decode_scan(waves, outs, self.alpha, True,
+                                 self.want_bound)
+
+    def supports_plan_sweep(self) -> bool:
+        return _use_scan()
+
+    def evaluate_plan_sweep(self, waves: Sequence[Sequence[int]],
+                            alphas: Sequence[float], period: float,
+                            timeout: Optional[float] = None
+                            ) -> List[List[List[Decision]]]:
+        """The (A, B) fused sweep: one ``vmap``-ed scan dispatch
+        evaluates every alpha's whole schedule (module docstring).
+        Decodes each alpha against its own local aft/proc arrays — run
+        state is never committed."""
+        alphas = list(alphas)
+        if not alphas:
+            return []
+        if not waves:
+            return [[] for _ in alphas]
+        t0 = time.monotonic()
+        outs = self._scan_dispatch(waves, alphas)
+        if timeout is not None:
+            elapsed = time.monotonic() - t0
+            budget = timeout * len(waves) * len(alphas)
+            if elapsed > budget:
+                raise WaveTimeoutError(0, elapsed, budget)
+        return [self._decode_scan(waves, tuple(o[ai] for o in outs),
+                                  alpha, False, True)
+                for ai, alpha in enumerate(alphas)]

@@ -71,14 +71,13 @@ consistency conditions (same alpha/period/queue prefix).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .backends import CandidateEvaluator, backend_class, resolve_backend_name
 from .faults import (DOWN_COMP, INFEASIBLE_EFT, FaultSpec,
-                     InfeasibleScheduleError, WaveTimeoutError)
+                     InfeasibleScheduleError)
 from .graph import SPG
 from .ranks import ldet_cc, rank_matrix
 from .scheduler import MessagePlacement, Schedule, SchedulingFailure
@@ -106,6 +105,40 @@ def validate_batch(batch) -> Optional[int]:
     if isinstance(batch, bool) or int(batch) != batch or int(batch) < 1:
         raise ValueError(f"batch must be an int >= 1, got {batch!r}")
     return int(batch)
+
+
+def plan_waves(queue: Sequence[int], preds_of: Sequence[Sequence[int]],
+               batch_cap: int) -> List[List[int]]:
+    """The level-batched **wave plan** of a queue: maximal runs of
+    consecutive queue entries with no precedence edge *into the run*,
+    capped at ``batch_cap`` (DESIGN.md §5).
+
+    A pure function of the static structure ``(queue, precedence edges,
+    cap)`` — no schedule state — which is what lets the engine emit the
+    whole plan up front and hand it to the backend in one
+    ``evaluate_plan`` call (the device backend folds the entire plan
+    into a single dispatch).  Tasks sharing a rank level are the
+    canonical wave; the direct predecessor check also absorbs
+    independent tasks of interleaved levels (transitive dependencies
+    cannot hide inside a wave: a precedence-safe queue would place the
+    intermediate task inside it too).  Decisions are wave-cap-invariant,
+    so the plan shape never changes the schedule.
+    """
+    waves: List[List[int]] = []
+    nq = len(queue)
+    qi = 0
+    while qi < nq:
+        wave = set()
+        hi = qi
+        while hi < nq and hi - qi < batch_cap:
+            j = queue[hi]
+            if any(i in wave for i in preds_of[j]):
+                break                    # depends on the wave: next one
+            wave.add(j)
+            hi += 1
+        waves.append(list(queue[qi:hi]))
+        qi = hi
+    return waves
 
 
 # One committed decision:
@@ -322,6 +355,88 @@ class CompiledInstance:
                          record=True, resume=resume, resume_pos=resume_pos,
                          backend=backend, batch=batch)
 
+    # -------------------------------------------------------- fused sweep
+    def sweep_supported(self, backend: Optional[str] = None) -> bool:
+        """Whether :meth:`schedule_sweep` can run on this backend — i.e.
+        the resolved evaluator fuses whole alpha grids into one dispatch
+        (``CandidateEvaluator.supports_plan_sweep``)."""
+        try:
+            return self.backend_instance(backend).supports_plan_sweep()
+        except Exception:
+            return False
+
+    def schedule_sweep(self, queue: Sequence[int], alphas: Sequence[float],
+                       period: Optional[float] = None,
+                       backend: Optional[str] = None,
+                       batch: Optional[int] = None
+                       ) -> List[Tuple[Schedule, float, DecisionTrace]]:
+        """Schedule one queue under **every** alpha of a grid in a single
+        device dispatch (the (A, B) fused sweep, DESIGN.md §5).
+
+        Per-alpha results are identical to ``len(alphas)`` independent
+        :meth:`schedule_traced` calls with ``want_bound=True`` — same
+        decisions, same recorded traces (so a later ``update()`` resumes
+        from them exactly like host-loop sweep traces), same
+        :class:`~.faults.InfeasibleScheduleError` on the first infeasible
+        (alpha, task) in sweep order.  Only valid when
+        :meth:`sweep_supported`; fresh runs only (resume goes through the
+        per-alpha host loop, which replays prefixes per trace).
+        """
+        g, tg = self.g, self.tg
+        preds_of = self._preds
+        names = self._link_names
+        if period is None:
+            period = self.default_period
+        batch_cap = validate_batch(batch)
+        if batch_cap is None:
+            batch_cap = DEFAULT_BATCH_MAX
+        be = self.backend_instance(backend)
+        be.start(alphas[0] if alphas else 0.0, period, True)
+        waves = plan_waves(list(queue), preds_of, batch_cap)
+        scheduled = [False] * self.n
+        for wave_js in waves:
+            for j in wave_js:
+                for i in preds_of[j]:
+                    if not scheduled[i]:
+                        raise SchedulingFailure(
+                            f"task {j} dequeued before predecessor {i} "
+                            f"(Sec. 3.2)")
+            for j in wave_js:
+                scheduled[j] = True
+        faulted = self.faults is not None
+        swept = be.evaluate_plan_sweep(waves, list(alphas), period,
+                                       timeout=self.wave_timeout)
+        out: List[Tuple[Schedule, float, DecisionTrace]] = []
+        for alpha, per_wave in zip(alphas, swept):
+            messages: Dict[Tuple[int, int], MessagePlacement] = {}
+            records: List[DecisionRecord] = []
+            bound = _INF
+            procs = np.full(self.n, -1, dtype=np.int64)
+            ast_ = np.zeros(self.n)
+            aft_ = np.zeros(self.n)
+            bid = 0
+            for wave_js, decisions in zip(waves, per_wave):
+                for j, (p, est, eft, msgs, ca, cb, contrib) in zip(
+                        wave_js, decisions):
+                    if faulted and not eft < INFEASIBLE_EFT:
+                        raise InfeasibleScheduleError(j, eft, self.faults)
+                    for (i, route, iv) in msgs:
+                        messages[(i, j)] = MessagePlacement(
+                            (i, j), int(procs[i]), p, route,
+                            [(names[lid], s_, f) for (lid, s_, f) in iv])
+                    procs[j] = p
+                    ast_[j] = est
+                    aft_[j] = eft
+                    if contrib < bound:
+                        bound = contrib
+                    records.append((j, p, est, eft, msgs, ca, cb, bid))
+                bid += 1
+            self.n_decisions_simulated += len(records)
+            tr = DecisionTrace(tuple(queue), alpha, period, True, records)
+            out.append((Schedule(g, tg, procs, ast_, aft_, messages,
+                                 alpha=alpha), bound, tr))
+        return out
+
     # ------------------------------------------------------------------
     def _run(self, queue: Sequence[int], alpha: float,
              period: Optional[float], want_bound: bool,
@@ -383,50 +498,34 @@ class CompiledInstance:
                 bid = rec_bid + 1    # a resumed suffix may split a batch
             self.n_decisions_replayed += resume_pos
 
-        # Level-batched queue walk: a wave is a maximal run of consecutive
-        # queue entries with no precedence edge *into the wave* — tasks
-        # sharing a rank level (longest entry->node depth, which every
-        # edge strictly increases) are the canonical case, and the direct
-        # predecessor check also absorbs independent tasks of interleaved
-        # levels (transitive dependencies cannot hide inside a wave: the
-        # precedence-safe queue would place the intermediate task inside
-        # it too).  Every wave member's predecessors are therefore
-        # committed before the wave starts, so the whole wave can be
-        # staged at once and handed to the backend's evaluate_batch
-        # (which still evaluates/commits sequentially: decisions inside a
-        # wave interact through link and processor state, and the
-        # contract is batch-invariance).
+        # Level-batched queue walk, planned **up front**: the wave plan
+        # is a pure function of (queue, precedence edges, cap) — see
+        # :func:`plan_waves` — so the engine emits the complete plan,
+        # proves precedence safety over it, and hands the whole thing to
+        # the backend in ONE ``evaluate_plan`` call.  The sequential
+        # default walks it wave-by-wave through ``evaluate_batch`` (the
+        # exact op order of the old interleaved loop — scalar/vector stay
+        # bit-exact); the Pallas backend folds the entire plan into a
+        # single device dispatch (DESIGN.md §5).  Decisions inside a
+        # wave still interact through link/processor state and are
+        # evaluated sequentially; the contract is batch-invariance.
         q = list(queue[start:]) if start else list(queue)
-        nq = len(q)
-        sim_count = 0
-        qi = 0
-        faulted = self.faults is not None
-        timeout = self.wave_timeout
-        while qi < nq:
-            wave = set()
-            hi = qi
-            while hi < nq and hi - qi < batch_cap:
-                j = q[hi]
-                if any(i in wave for i in preds_of[j]):
-                    break                # depends on the wave: next one
-                wave.add(j)
-                hi += 1
-            batch_js = q[qi:hi]
-            for j in batch_js:
+        waves = plan_waves(q, preds_of, batch_cap)
+        for wave_js in waves:
+            for j in wave_js:
                 for i in preds_of[j]:
                     if not scheduled[i]:
                         raise SchedulingFailure(
                             f"task {j} dequeued before predecessor {i} "
                             f"(Sec. 3.2)")
-            if timeout is None:
-                decisions = be.evaluate_batch(batch_js)
-            else:
-                t0 = time.monotonic()
-                decisions = be.evaluate_batch(batch_js)
-                elapsed = time.monotonic() - t0
-                if elapsed > timeout:
-                    raise WaveTimeoutError(bid, elapsed, timeout)
-            for j, (p, est, eft, msgs, ca, cb, contrib) in zip(batch_js,
+            for j in wave_js:
+                scheduled[j] = True
+        sim_count = 0
+        faulted = self.faults is not None
+        per_wave = be.evaluate_plan(waves, timeout=self.wave_timeout,
+                                    bid0=bid)
+        for wave_js, decisions in zip(waves, per_wave):
+            for j, (p, est, eft, msgs, ca, cb, contrib) in zip(wave_js,
                                                                decisions):
                 if faulted and not eft < INFEASIBLE_EFT:
                     # the *winner* is only reachable through a masked
@@ -436,14 +535,12 @@ class CompiledInstance:
                     messages[(i, j)] = MessagePlacement(
                         (i, j), proc_of[i], p, route,
                         [(names[lid], s_, f) for (lid, s_, f) in iv])
-                scheduled[j] = True
                 if contrib < bound:
                     bound = contrib
                 if record:
                     records.append((j, p, est, eft, msgs, ca, cb, bid))
-            sim_count += len(batch_js)
+            sim_count += len(wave_js)
             bid += 1
-            qi = hi
 
         self.n_decisions_simulated += sim_count
         trace = DecisionTrace(tuple(queue), alpha,

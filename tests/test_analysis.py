@@ -288,12 +288,138 @@ class TestKernelCarried:
 
 class TestKernelGridCarry:
     def test_violation_2d_grid(self, tmp_path):
+        # the 1-param `full` index map cannot even name the outer axis
         assert_finds(tmp_path, kernel_fixture(GOOD_BODY, grid="(B, K)"),
                      "kernel-grid-carry")
+
+    def test_violation_2d_grid_leading_axis_ignored(self, tmp_path):
+        # 2 params, but the leading (outer) axis is never used: every
+        # outer index would revisit — and race on — the same block
+        src = kernel_fixture(GOOD_BODY, grid="(B, K)").replace(
+            "full = lambda *s: pl.BlockSpec(s, lambda i: (0,) * len(s))",
+            "full = lambda *s: pl.BlockSpec(s, lambda a, i: (0,) * len(s))")
+        assert_finds(tmp_path, src, "kernel-grid-carry")
+
+    def test_clean_2d_grid_sweep_contract(self, tmp_path):
+        # the (A, B) sweep shape: carry confined to the innermost axis,
+        # the leading axis addresses an independent state copy per index
+        src = kernel_fixture(GOOD_BODY, grid="(B, K)").replace(
+            "full = lambda *s: pl.BlockSpec(s, lambda i: (0,) * len(s))",
+            "full = lambda *s: pl.BlockSpec((1,) + s,"
+            " lambda a, i: (a,) + (0,) * len(s))").replace(
+            "dec = lambda *s: pl.BlockSpec((1,) + s, "
+            "lambda i: (i,) + (0,) * len(s))",
+            "dec = lambda *s: pl.BlockSpec((1, 1) + s, "
+            "lambda a, i: (a, i) + (0,) * len(s))")
+        assert_clean(tmp_path, src, "kernel-grid-carry")
 
     def test_clean_1d_grid(self, tmp_path):
         assert_clean(tmp_path, kernel_fixture(GOOD_BODY),
                      "kernel-grid-carry")
+
+
+# A miniature of the whole-schedule scan idiom: the body function
+# threads (lf, pf) through the carry and stacks per-step outputs.
+SCAN_TEMPLATE = """\
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+def step(carry, xs):
+{body}
+
+def schedule(lf0, pf0, waves):
+    (lf, pf), ys = lax.scan(step, (lf0, pf0), waves)
+    return lf, pf, ys
+"""
+
+
+def scan_fixture(body):
+    indented = "\n".join("    " + ln if ln.strip() else ln
+                         for ln in textwrap.dedent(body).strip().splitlines())
+    return SCAN_TEMPLATE.format(body=indented)
+
+
+SCAN_GOOD_BODY = """
+    lf, pf = carry
+    est = jnp.maximum(lf, xs)
+    lf = lf + est
+    pf = jnp.minimum(pf, est)
+    return (lf, pf), est
+"""
+
+
+class TestScanCarry:
+    def test_clean_one_bind_per_leaf(self, tmp_path):
+        assert_clean(tmp_path, scan_fixture(SCAN_GOOD_BODY),
+                     "scan-carry-race,scan-carry-uncommitted")
+
+    def test_clean_exclusive_branches(self, tmp_path):
+        assert_clean(tmp_path, scan_fixture("""
+            lf, pf = carry
+            est = jnp.maximum(lf, xs)
+            if est.ndim:
+                lf = lf + est
+            else:
+                lf = lf - est
+            pf = jnp.minimum(pf, est)
+            return (lf, pf), est
+            """), "scan-carry-race,scan-carry-uncommitted")
+
+    def test_clean_nested_function_scope_excluded(self, tmp_path):
+        # a fori_loop body threads its own state tuple; its bindings
+        # are not writes to the outer carry leaf
+        assert_clean(tmp_path, scan_fixture("""
+            lf, pf = carry
+            def slot(b, st):
+                lf, pf = st
+                lf = lf + b
+                return (lf, pf)
+            lf, pf = lax.fori_loop(0, 4, slot, (lf, pf))
+            return (lf, pf), lf
+            """), "scan-carry-race,scan-carry-uncommitted")
+
+    def test_race_double_bind(self, tmp_path):
+        out = assert_finds(tmp_path, scan_fixture("""
+            lf, pf = carry
+            lf = lf + xs
+            lf = lf * 2.0
+            pf = jnp.minimum(pf, lf)
+            return (lf, pf), lf
+            """), "scan-carry-race")
+        assert "2 bindings" in out
+
+    def test_race_bind_in_loop(self, tmp_path):
+        assert_finds(tmp_path, scan_fixture("""
+            lf, pf = carry
+            for h in range(4):
+                lf = lf + xs
+            pf = jnp.minimum(pf, lf)
+            return (lf, pf), lf
+            """), "scan-carry-race")
+
+    def test_race_duplicate_carry_leaf(self, tmp_path):
+        out = assert_finds(tmp_path, scan_fixture("""
+            lf, pf = carry
+            lf = lf + xs
+            return (lf, lf), pf
+            """), "scan-carry-race")
+        assert "alias" in out
+
+    def test_uncommitted_leaf(self, tmp_path):
+        out = assert_finds(tmp_path, scan_fixture("""
+            lf, pf = carry
+            lf = lf + xs
+            return (lf, pf), lf
+            """), "scan-carry-uncommitted")
+        assert "pf" in out
+
+    def test_initial_unpack_not_counted_as_bind(self, tmp_path):
+        # `lf, pf = carry` alone must read as ZERO commits, not one
+        assert_finds(tmp_path, scan_fixture("""
+            lf, pf = carry
+            return (lf, pf), xs
+            """), "scan-carry-uncommitted")
 
 
 class TestKernelArity:

@@ -437,12 +437,13 @@ def test_pallas_selection_end_to_end(monkeypatch):
     assert Scheduler(tg8).submit(g8, ONE_POINT).backend == "vector"
 
 
-def test_paper_example_batched_waves():
+def test_paper_example_batched_waves(monkeypatch):
     """The paper queue decomposes into multi-task level waves: batch
     grouping (trace batch ids) is identical across backends, at least
-    one wave has size > 1, and the batched pallas path pays exactly one
-    kernel launch and one host round-trip per wave — O(levels), not
-    O(decisions)."""
+    one wave has size > 1, and the per-wave pallas path pays exactly
+    one kernel launch and one host round-trip per wave — O(levels), not
+    O(decisions) — while the default scan path folds the whole plan
+    into ONE launch / ONE round-trip (DESIGN.md §5)."""
     pytest.importorskip("jax")
     from collections import Counter
 
@@ -463,7 +464,12 @@ def test_paper_example_batched_waves():
     be = inst.backend_instance("pallas")
     l0, r0 = be.n_launches, be.n_roundtrips
     inst.schedule(q, alpha=1.06, backend="pallas")
-    assert be.n_launches - l0 == n_waves
+    assert be.n_launches - l0 == 1           # whole plan, one dispatch
+    assert be.n_roundtrips - r0 == 1
+    monkeypatch.setenv("REPRO_PALLAS_SCAN", "0")
+    l0, r0 = be.n_launches, be.n_roundtrips
+    inst.schedule(q, alpha=1.06, backend="pallas")
+    assert be.n_launches - l0 == n_waves     # per-wave fallback
     assert be.n_roundtrips - r0 == n_waves
 
 

@@ -52,12 +52,15 @@ def test_pallas_without_jax_demotes_at_resolve_time(monkeypatch):
 
 
 def test_pallas_kernel_failure_demotes_at_plan_time(monkeypatch):
+    """Per-wave path: an injected ``evaluate_batch`` fault demotes the
+    plan (scan disabled so the wave kernel actually runs)."""
     pytest.importorskip("jax")
     from repro.core.backends.pallas import PallasBackend
 
     def _boom(self, js):
         raise RuntimeError("injected kernel failure")
 
+    monkeypatch.setenv("REPRO_PALLAS_SCAN", "0")
     monkeypatch.setattr(PallasBackend, "evaluate_batch", _boom)
     monkeypatch.setattr(api_mod, "_FALLBACK_WARNED", set())
     tg, g = _case()
@@ -67,6 +70,28 @@ def test_pallas_kernel_failure_demotes_at_plan_time(monkeypatch):
     assert plan.fallback is not None
     assert plan.fallback[0][0] == "pallas"
     assert "injected kernel failure" in plan.fallback[0][2]
+    assert plan.backend in ("vector", "scalar")
+    _assert_same_decisions(plan, _scalar_reference(tg, g))
+
+
+def test_pallas_scan_failure_demotes_at_plan_time(monkeypatch):
+    """Scan path: a fault inside the whole-schedule dispatch demotes the
+    plan exactly like a per-wave kernel fault."""
+    pytest.importorskip("jax")
+    from repro.core.backends.pallas import PallasBackend
+
+    def _boom(self, waves, alphas):
+        raise RuntimeError("injected scan failure")
+
+    monkeypatch.setattr(PallasBackend, "_scan_dispatch", _boom)
+    monkeypatch.setattr(api_mod, "_FALLBACK_WARNED", set())
+    tg, g = _case()
+    sched = Scheduler(tg, policy=_pol(), backend="pallas")
+    with pytest.warns(RuntimeWarning, match="injected scan failure"):
+        plan = sched.submit(g)
+    assert plan.fallback is not None
+    assert plan.fallback[0][0] == "pallas"
+    assert "injected scan failure" in plan.fallback[0][2]
     assert plan.backend in ("vector", "scalar")
     _assert_same_decisions(plan, _scalar_reference(tg, g))
 

@@ -234,7 +234,10 @@ def test_tile_padding_under_interpreter(monkeypatch):
 
 
 # ------------------------------------------------ pallas: O(levels) I/O
-def test_roundtrips_scale_with_levels_not_decisions():
+def test_roundtrips_scale_with_levels_not_decisions(monkeypatch):
+    """Per-wave path: one launch/round-trip per wave — O(levels).  Scan
+    path (the default): ONE launch, ONE state upload, ONE blocking
+    fetch for the whole schedule — O(1), independent of levels."""
     pytest.importorskip("jax")
     tg = paper_topology()
     g = random_spg(40, np.random.default_rng(23), ccr=1.0, tg=tg,
@@ -254,6 +257,12 @@ def test_roundtrips_scale_with_levels_not_decisions():
     be = inst.backend_instance("pallas")
     l0, r0, u0 = be.n_launches, be.n_roundtrips, be.n_state_uploads
     p = inst.schedule(q, alpha=0.85, backend="pallas")
+    assert be.n_launches - l0 == 1
+    assert be.n_roundtrips - r0 == 1
+    assert be.n_state_uploads - u0 == 1
+    monkeypatch.setenv("REPRO_PALLAS_SCAN", "0")
+    l0, r0, u0 = be.n_launches, be.n_roundtrips, be.n_state_uploads
+    pw = inst.schedule(q, alpha=0.85, backend="pallas")
     assert be.n_launches - l0 == runs
     assert be.n_roundtrips - r0 == runs
     assert be.n_state_uploads - u0 == 1          # one upload per run start
@@ -262,18 +271,21 @@ def test_roundtrips_scale_with_levels_not_decisions():
     assert runs <= n_levels + 2
     assert runs < g.n // 2
     s = inst.schedule(q, alpha=0.85, backend="scalar")
-    assert np.array_equal(s.proc, p.proc)
-    assert np.array_equal(s.finish, p.finish)
+    for sched in (p, pw):
+        assert np.array_equal(s.proc, sched.proc)
+        assert np.array_equal(s.finish, sched.finish)
 
 
 # ------------------------------------------------ pallas: kernel cache
 def test_kernel_cache_lru_eviction_changes_nothing(monkeypatch):
     """A capacity-1 kernel cache forces an eviction/rebuild on every
     shape switch; the rebuilt kernels produce identical schedules and
-    the cache never exceeds its bound."""
+    the cache never exceeds its bound (per-wave path: the scan path has
+    its own mirror of this test below)."""
     pytest.importorskip("jax")
     from repro.core.backends import pallas as pb
 
+    monkeypatch.setenv("REPRO_PALLAS_SCAN", "0")
     monkeypatch.setattr(pb, "_RUN_CACHE_MAX", 1)
     pb._RUN_CACHE.clear()
     tg = paper_topology()
@@ -290,6 +302,116 @@ def test_kernel_cache_lru_eviction_changes_nothing(monkeypatch):
             assert np.array_equal(s.proc, p.proc)
             assert np.array_equal(s.finish, p.finish)
             assert len(pb._RUN_CACHE) <= 1
+
+
+# ------------------------------------------- pallas: scan trace resume
+def test_scan_trace_resumes_cross_backend():
+    """Traces are portable across the scan boundary in both directions:
+    a trace recorded through the whole-schedule scan dispatch replays
+    decision-identically on scalar/vector, and a scalar trace resumes
+    through the scan path — including a resume position that splits a
+    wave, where the suffix re-enters the scan dispatch mid-schedule."""
+    pytest.importorskip("jax")
+    tg = paper_topology()
+    g = random_spg(40, np.random.default_rng(31), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    ref, bref, tr_p = inst.schedule_traced(q, 0.5, backend="pallas")
+    bids = [rec[7] for rec in tr_p.records]
+    pos = next(k for k in range(1, len(bids)) if bids[k] == bids[k - 1])
+    # scan-recorded -> scalar/vector replay
+    for backend in ("scalar", "vector"):
+        s, b, _ = inst.schedule_traced(q, 0.5, resume=tr_p,
+                                       resume_pos=pos, backend=backend)
+        assert_identical(ref, s)
+        assert b == bref
+    # scalar-recorded -> scan replay; the replayed suffix is ONE dispatch
+    sref, bs, tr_s = inst.schedule_traced(q, 0.5, backend="scalar")
+    assert_identical(ref, sref)
+    be = inst.backend_instance("pallas")
+    l0, u0 = be.n_launches, be.n_state_uploads
+    p, b, _ = inst.schedule_traced(q, 0.5, resume=tr_s, resume_pos=pos,
+                                   backend="pallas")
+    assert_identical(ref, p)
+    assert b == bs
+    assert be.n_launches - l0 == 1
+    assert be.n_state_uploads - u0 == 1
+
+
+def test_update_suffix_replay_reenters_scan_path():
+    """A mid-schedule drift update on a pallas session replays only the
+    trace suffix — through the scan dispatch — and stays bit-identical
+    to a scalar session applying the same drift."""
+    pytest.importorskip("jax")
+    tg = paper_topology()
+    g = random_spg(40, np.random.default_rng(13), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    pol = HVLB_CC_B(alpha_max=1.0, alpha_step=0.5)
+    sp = Scheduler(tg, policy=pol, backend="pallas")
+    ss = Scheduler(tg, policy=pol, backend="scalar")
+    p0, s0 = sp.submit(g), ss.submit(g)
+    assert p0.fallback is None
+    assert_identical(p0.schedule, s0.schedule)
+    task = int(np.argmax(p0.schedule.start))     # a late task: real suffix
+    up = sp.update(task_rates={task: 1.4})
+    us = ss.update(task_rates={task: 1.4})
+    assert up.fallback is None
+    assert_identical(up.schedule, us.schedule)
+    assert up.replay.suffix_start == us.replay.suffix_start
+    if up.replay.suffix_start > 0:               # replay really happened
+        assert up.replay.decisions_replayed > 0
+
+
+# ----------------------------------------------- pallas: scan run cache
+def test_scan_cache_lru_eviction_changes_nothing(monkeypatch):
+    """Scan-path mirror of the kernel-cache test: a capacity-1 cache
+    forces an eviction/rebuild of the compiled whole-schedule scan on
+    every padded-shape switch; the rebuilt scans produce identical
+    schedules and the cache never exceeds its bound."""
+    pytest.importorskip("jax")
+    from repro.core.backends import pallas as pb
+
+    monkeypatch.setattr(pb, "_RUN_CACHE_MAX", 1)
+    pb._RUN_CACHE.clear()
+    tg = paper_topology()
+    cases = []
+    for seed, n in ((1, 12), (2, 40)):           # Np buckets 16 vs 64
+        g = random_spg(n, np.random.default_rng(seed), ccr=1.0, tg=tg,
+                       outdeg_constraint=True)
+        r, q = _queue_for(g, tg)
+        cases.append((CompiledInstance(g, tg, rank=r), q))
+    keys = set()
+    for _ in range(2):                           # alternate -> evict
+        for inst, q in cases:
+            s = inst.schedule(q, alpha=0.85, backend="scalar")
+            p = inst.schedule(q, alpha=0.85, backend="pallas")
+            assert np.array_equal(s.proc, p.proc)
+            assert np.array_equal(s.finish, p.finish)
+            assert len(pb._RUN_CACHE) <= 1
+            keys |= set(pb._RUN_CACHE)
+    assert all(k[0] == "scan" for k in keys)
+    assert len(keys) == 2                        # the shapes really differ
+
+
+def test_scan_cache_keys_on_padded_shape_not_graph():
+    """The scan cache keys on PADDED dims only, so instances whose
+    graphs bucket to the same shapes share ONE compiled scan."""
+    pytest.importorskip("jax")
+    from repro.core.backends import pallas as pb
+
+    pb._RUN_CACHE.clear()
+    tg = paper_topology()
+    for inst_seed in (3, 3):                     # two instances, same graph
+        g = random_spg(20, np.random.default_rng(inst_seed), ccr=1.0,
+                       tg=tg, outdeg_constraint=True)
+        r, q = _queue_for(g, tg)
+        inst = CompiledInstance(g, tg, rank=r)
+        s = inst.schedule(q, alpha=0.85, backend="scalar")
+        p = inst.schedule(q, alpha=0.85, backend="pallas")
+        assert np.array_equal(s.proc, p.proc)
+    scan_keys = [k for k in pb._RUN_CACHE if k[0] == "scan"]
+    assert len(scan_keys) == 1                   # second instance: cache hit
 
 
 # ------------------------------------------- pallas: f32 near-tie policy
@@ -332,6 +454,34 @@ def test_f32_near_tie_fuzz(monkeypatch, mag, sign):
     # deterministic: a fresh instance reproduces the winner exactly
     assert int(CompiledInstance(*_two_proc_tie_case(d)).schedule(
         [0], backend="pallas").proc[0]) == pallas_win
+
+
+def test_scan_f32_tile_matches_wave_and_policy(monkeypatch):
+    """The scan path under compiled-path numerics (f32 + tile padding —
+    the configuration a dedicated CI step forces): decisions identical
+    to the per-wave f32 path and to the f64 scalar reference on a
+    well-separated workload, floats within the documented tolerance."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_PALLAS_DTYPE", "float32")
+    monkeypatch.setenv("REPRO_PALLAS_TILE", "1")
+    from repro.core.backends.pallas import F32_NEAR_TIE_RTOL
+
+    tg = paper_topology()
+    g = random_spg(30, np.random.default_rng(6), ccr=1.0, tg=tg,
+                   outdeg_constraint=True)
+    r, q = _queue_for(g, tg)
+    inst = CompiledInstance(g, tg, rank=r)
+    be = inst.backend_instance("pallas")
+    assert be._f32 and be._tile
+    s = inst.schedule(q, alpha=0.85, backend="scalar")
+    p_scan = inst.schedule(q, alpha=0.85, backend="pallas")
+    monkeypatch.setenv("REPRO_PALLAS_SCAN", "0")
+    p_wave = inst.schedule(q, alpha=0.85, backend="pallas")
+    assert np.array_equal(p_scan.proc, p_wave.proc)
+    assert np.array_equal(p_scan.finish, p_wave.finish)
+    assert np.array_equal(p_scan.proc, s.proc)
+    np.testing.assert_allclose(p_scan.finish, s.finish,
+                               rtol=F32_NEAR_TIE_RTOL)
 
 
 def test_f32_schedule_deterministic_and_close(monkeypatch):
